@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, CSV/JSON artifacts."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "experiments", "bench")
+
+
+def timeit(fn: Callable, *, repeats: int = 1) -> float:
+    """Best-of-N wall time in seconds (first call may include compile)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def save_rows(name: str, rows: List[Dict], out_dir: Optional[str] = None
+              ) -> str:
+    out_dir = out_dir or OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path
+
+
+def print_csv(rows: List[Dict]) -> None:
+    if not rows:
+        return
+    keys = list(rows[0])
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))

@@ -1,0 +1,50 @@
+"""Paper Fig. 1 (motivating example): the duplicate blow-up.
+
+Three overlapping sources semantified blindly explode into raw triples
+(the paper: 2,049,442,714 raw vs 102,549 distinct — a 16,445x blow-up);
+MapSDI produces the distinct set directly.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from repro.core.pipeline import mapsdi_create_kg
+from repro.core.tframework import t_framework_create_kg
+from repro.data.synthetic import make_motivating_dis
+
+from .common import print_csv, save_rows
+
+
+def run(n_rows: int = 4000, seed: int = 0) -> List[Dict]:
+    dis_t = make_motivating_dis(n_rows, seed=seed)
+    kg_t, stats_t = t_framework_create_kg(dis_t)
+    dis_m = make_motivating_dis(n_rows, seed=seed)
+    kg_m, stats_m = mapsdi_create_kg(dis_m)
+    assert kg_m.row_set() == kg_t.row_set()
+    blow = stats_t["raw_triples"] / max(int(kg_t.count), 1)
+    rows = [{
+        "rows_per_source": n_rows,
+        "raw_triples_tframework": stats_t["raw_triples"],
+        "distinct_triples": int(kg_t.count),
+        "blowup_x": round(blow, 1),
+        "mapsdi_rows_processed": sum(
+            stats_m["source_rows_after"].values()),
+        "tframework_rows_processed": sum(
+            stats_t["source_rows"].values()),
+    }]
+    return rows
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=4000)
+    args = ap.parse_args(argv)
+    rows = run(n_rows=args.rows)
+    save_rows("motivating", rows)
+    print_csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

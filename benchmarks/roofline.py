@@ -1,0 +1,70 @@
+"""Roofline summary: collate the dry-run + roofline artifacts.
+
+Reads ``experiments/dryrun_scan`` (production compiles: memory proof) and
+``experiments/roofline`` (depth-extrapolated cost terms) and prints the
+per-(arch x shape) table used by EXPERIMENTS.md §Roofline. Run
+``python -m repro.launch.dryrun`` / ``python -m repro.launch.roofline``
+first to (re)generate the artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import print_csv, save_rows
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                    "experiments")
+
+
+def load(dirname: str) -> Dict[str, Dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(ROOT, dirname, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        out[f"{rec['arch']}__{rec['shape']}__{rec.get('mesh', 'single')}"] \
+            = rec
+    return out
+
+
+def run() -> List[Dict]:
+    scans = load("dryrun_scan")
+    roofs = load("roofline")
+    rows: List[Dict] = []
+    for key, roof in sorted(roofs.items()):
+        if roof.get("status") != "ok":
+            continue
+        scan = scans.get(key, {})
+        mem = scan.get("memory", {})
+        t = roof["terms_seconds"]
+        rows.append({
+            "arch": roof["arch"], "shape": roof["shape"],
+            "mesh": roof["mesh"],
+            "compute_s": f"{t['compute_s']:.3e}",
+            "memory_s": f"{t['memory_s']:.3e}",
+            "collective_s": f"{t['collective_s']:.3e}",
+            "dominant": roof["dominant"].replace("_s", ""),
+            "useful_ratio": round(roof["useful_flops_ratio"], 3),
+            "roofline_frac": round(roof["roofline_fraction"], 4),
+            "hbm_gib_per_dev": round(
+                (mem.get("argument_size_in_bytes", 0)
+                 + mem.get("temp_size_in_bytes", 0)) / 2**30, 2),
+        })
+    return rows
+
+
+def main(argv=None) -> List[Dict]:
+    rows = run()
+    save_rows("roofline_summary", rows)
+    print_csv(rows)
+    if not rows:
+        print("(no roofline artifacts yet: run "
+              "`python -m repro.launch.roofline` first)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

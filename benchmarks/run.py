@@ -1,0 +1,49 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``python -m benchmarks.run [--scale S]`` runs:
+
+  * group_a     — Fig. 8 volume x redundancy grid (2 engines)
+  * group_b     — Fig. 9 join scenarios
+  * table1      — Table 1 source-size reduction
+  * motivating  — Fig. 1 duplicate blow-up
+  * roofline    — collated §Roofline table (from dry-run artifacts)
+
+Artifacts land in ``experiments/bench/*.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25,
+                    help="row-count multiplier for the paper grids "
+                         "(1.0 = the scaled-down paper testbed)")
+    ap.add_argument("--only", default="",
+                    help="comma list: group_a,group_b,table1,motivating,"
+                         "roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import group_a, group_b, motivating, roofline, table1
+
+    jobs = [("group_a", lambda: group_a.main(["--scale", str(args.scale)])),
+            ("group_b", lambda: group_b.main(["--scale", str(args.scale)])),
+            ("table1", lambda: table1.main(["--scale", str(args.scale)])),
+            ("motivating", lambda: motivating.main(
+                ["--rows", str(max(200, int(4000 * args.scale)))])),
+            ("roofline", lambda: roofline.main([]))]
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        fn()
+        print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,38 @@
+"""Quickstart: the paper's Fig. 3/4 example end-to-end in ~40 lines.
+
+Builds the 9-row gene source, the RML triple map that uses 4 of its 8
+attributes, runs MapSDI (projection pushes duplicates out **before**
+semantification) and the traditional framework, and prints both the
+N-Triples output and the work each framework did.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import parse_dis
+from repro.core.pipeline import mapsdi_create_kg
+from repro.core.rdfizer import triples_to_ntriples
+from repro.core.tframework import t_framework_create_kg
+from repro.data.synthetic import FIG3_MAP, fig4_gene_source
+
+records, attrs = fig4_gene_source()
+dis = parse_dis({"sources": {"genes": {"attrs": attrs, "records": records}},
+                 "maps": [FIG3_MAP]})
+
+# --- traditional pipeline: semantify everything, dedup at the end --------
+kg_t, stats_t = t_framework_create_kg(
+    parse_dis({"sources": {"genes": {"attrs": attrs, "records": records}},
+               "maps": [FIG3_MAP]}))
+print(f"T-framework : {stats_t['raw_triples']} raw triples generated, "
+      f"{stats_t['kg_triples']} after dedup")
+
+# --- MapSDI: project + dedup the SOURCE, then semantify -------------------
+kg_m, stats_m = mapsdi_create_kg(dis)
+rows_after = sum(stats_m['source_rows_after'].values())
+print(f"MapSDI      : {rows_after} source rows after Rule 1 "
+      f"(from {sum(stats_m['source_rows_before'].values())}), "
+      f"{stats_m['raw_triples']} raw triples, no duplicates generated")
+
+assert kg_m.row_set() == kg_t.row_set(), "Q1: same knowledge graph"
+
+print("\nKnowledge graph (N-Triples):")
+for line in sorted(triples_to_ntriples(kg_m, dis)):
+    print(" ", line)

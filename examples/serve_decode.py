@@ -1,0 +1,15 @@
+"""Batched serving: continuous-batching decode on a reduced model.
+
+16 requests through 4 concurrent decode slots; prefill admits requests
+into free slots, one jitted serve_step advances every active slot per
+tick. Prints throughput and latency percentiles.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main
+
+raise SystemExit(main([
+    "--arch", "qwen3-1.7b",
+    "--requests", "16", "--slots", "4",
+    "--prompt-len", "32", "--gen-len", "16",
+]))

@@ -1,0 +1,53 @@
+"""End-to-end MapSDI pipeline: transform the DIS, then semantify.
+
+``mapsdi_create_kg`` = the full framework of Fig. 2: extract knowledge from
+the mapping rules, project/dedup/merge the sources (Rules 1–3 to fixpoint),
+rewrite the rules, then hand the minimized ``DIS'`` to the RDFizer.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.relalg import Table
+
+from .rdfizer import Engine, RDFizer
+from .schema import DIS
+from .transform import TransformStats, apply_mapsdi
+
+
+def mapsdi_create_kg(dis: DIS, engine: Engine = "sdm",
+                     ) -> Tuple[Table, Dict[str, object]]:
+    """Pre-process + RDFize; returns (KG, stats incl. Table-1-style sizes)."""
+    t0 = time.perf_counter()
+    dis2, tstats = apply_mapsdi(dis)
+    t1 = time.perf_counter()
+    rdfizer = RDFizer(dis2, engine)
+    kg, raw = rdfizer()
+    kg.data.block_until_ready()
+    t2 = time.perf_counter()
+    return kg, {
+        "raw_triples": int(raw),
+        "kg_triples": int(kg.count),
+        "preprocess_seconds": t1 - t0,
+        "semantify_seconds": t2 - t1,
+        "source_rows_before": tstats.source_rows_before,
+        "source_rows_after": tstats.source_rows_after,
+        "rule1": tstats.rule1_applications,
+        "rule2": tstats.rule2_applications,
+        "rule3": tstats.rule3_merges,
+    }
+
+
+def make_mapsdi_fn(dis: DIS, engine: Engine = "sdm"):
+    """Pre-transform once (planning), return jit-friendly semantify closure
+    over the *transformed* sources — what steady-state re-execution runs."""
+    dis2, _ = apply_mapsdi(dis)
+    rdfizer = RDFizer(dis2, engine)
+
+    def fn(sources: Optional[Dict[str, Table]] = None):
+        return rdfizer(sources if sources is not None else dis2.sources)
+
+    return fn, dis2

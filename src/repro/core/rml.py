@@ -1,0 +1,129 @@
+"""Parser/serializer for the RML subset MapSDI consumes.
+
+The JSON form mirrors RML structure (rml:logicalSource, rr:subjectMap with
+rr:template + rr:class, rr:predicateObjectMap with rml:reference /
+rr:template / rr:constant objects, and rr:joinCondition +
+rr:parentTriplesMap), e.g.::
+
+    {
+      "name": "TripleMap1",
+      "source": "genes",
+      "subject": {"template": "http://project-iasis.eu/Gene/{ENSG}",
+                  "class": "iasis:Gene"},
+      "poms": [
+        {"predicate": "iasis:geneName", "object": {"reference": "SYMBOL"}},
+        {"predicate": "iasis:locatedIn",
+         "object": {"parentTriplesMap": "TripleMap2",
+                    "joinCondition": {"child": "Genename",
+                                      "parent": "Genename"}}}
+      ]
+    }
+
+``parse_dis`` builds a full :class:`DIS` from ``{"sources": ..., "maps":
+...}`` where each source is ``{"attrs": [...], "records": [...]}``.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Mapping, Optional, Sequence
+
+from repro.relalg import Table, Vocab
+
+from .schema import (DIS, PredicateObjectMap, RefObjectMap, TermMap,
+                     TripleMap)
+
+_TEMPLATE_VAR = re.compile(r"\{([^{}]+)\}")
+
+
+def parse_term_map(obj: Mapping) -> TermMap:
+    if "reference" in obj:
+        return TermMap(kind="reference", attr=obj["reference"])
+    if "template" in obj:
+        tmpl = obj["template"]
+        vars_ = _TEMPLATE_VAR.findall(tmpl)
+        if len(vars_) != 1:
+            raise ValueError(
+                f"only single-placeholder templates supported, got {tmpl!r}")
+        canonical = _TEMPLATE_VAR.sub("{}", tmpl)
+        return TermMap(kind="template", attr=vars_[0], template=canonical)
+    if "constant" in obj:
+        return TermMap(kind="constant", constant=obj["constant"])
+    raise ValueError(f"cannot parse term map {obj!r}")
+
+
+def parse_triple_map(obj: Mapping) -> TripleMap:
+    subj_obj = dict(obj["subject"])
+    subject_class = subj_obj.pop("class", None)
+    subject = parse_term_map(subj_obj)
+    poms = []
+    for pom in obj.get("poms", ()):
+        if "parentTriplesMap" in pom.get("object", {}):
+            jc = pom["object"]["joinCondition"]
+            o = RefObjectMap(parent_map=pom["object"]["parentTriplesMap"],
+                             child_attr=jc["child"], parent_attr=jc["parent"])
+        else:
+            o = parse_term_map(pom["object"])
+        poms.append(PredicateObjectMap(predicate=pom["predicate"], object=o))
+    return TripleMap(name=obj["name"], source=obj["source"], subject=subject,
+                     subject_class=subject_class, poms=tuple(poms))
+
+
+def parse_dis(obj: Mapping, vocab: Optional[Vocab] = None,
+              capacity_slack: float = 1.0) -> DIS:
+    """Build a DIS from the JSON form (sources with inline records)."""
+    vocab = vocab or Vocab()
+    sources: Dict[str, Table] = {}
+    for name, src in obj["sources"].items():
+        attrs = list(src["attrs"])
+        records = src.get("records", [])
+        cap = max(1, int(len(records) * capacity_slack))
+        sources[name] = Table.from_records(records, attrs, vocab, cap)
+    maps = [parse_triple_map(m) for m in obj["maps"]]
+    null_code = vocab.intern(None) if any(
+        rec.get(a) is None for src in obj["sources"].values()
+        for rec in src.get("records", []) for a in src["attrs"]) else None
+    dis = DIS(sources=sources, maps=maps, vocab=vocab, null_code=null_code)
+    # pre-register templates deterministically
+    for m in maps:
+        if m.subject.kind == "template":
+            dis.template_id(m.subject.template)
+        for p in m.poms:
+            if isinstance(p.object, TermMap) and p.object.kind == "template":
+                dis.template_id(p.object.template)
+    return dis
+
+
+def load_dis(path: str, **kw) -> DIS:
+    with open(path) as f:
+        return parse_dis(json.load(f), **kw)
+
+
+# -- serialization (triple maps only; sources are data) ----------------------
+
+def term_map_to_json(t: TermMap) -> Dict:
+    if t.kind == "reference":
+        return {"reference": t.attr}
+    if t.kind == "template":
+        return {"template": t.template.replace("{}", "{" + t.attr + "}")}
+    return {"constant": t.constant}
+
+
+def triple_map_to_json(m: TripleMap) -> Dict:
+    subj = term_map_to_json(m.subject)
+    if m.subject_class:
+        subj["class"] = m.subject_class
+    poms: List[Dict] = []
+    for p in m.poms:
+        if isinstance(p.object, RefObjectMap):
+            obj = {"parentTriplesMap": p.object.parent_map,
+                   "joinCondition": {"child": p.object.child_attr,
+                                     "parent": p.object.parent_attr}}
+        else:
+            obj = term_map_to_json(p.object)
+        poms.append({"predicate": p.predicate, "object": obj})
+    return {"name": m.name, "source": m.source, "subject": subj, "poms": poms}
+
+
+def dump_maps(maps: Sequence[TripleMap]) -> str:
+    return json.dumps([triple_map_to_json(m) for m in maps], indent=2)

@@ -1,0 +1,147 @@
+"""Data model of a data integration system ``DIS_G = <O, S, M>``.
+
+Mirrors the paper's §3 formalization: a unified schema ``O`` (classes and
+properties derived from the mapping rules), sources ``S`` with signatures
+(attribute sets) and extensions (:class:`~repro.relalg.Table`), and mapping
+rules ``M`` expressed in an RML subset (triples maps with subject/predicate-
+object maps and join conditions).
+
+RDF terms on device are int32 pairs ``(tmpl_id, val_id)``:
+
+* ``tmpl_id == TMPL_LITERAL`` (0): plain literal whose text is
+  ``vocab.decode(val_id)`` — produced by ``rml:reference`` object maps.
+* ``tmpl_id == TMPL_CONSTANT`` (1): constant IRI ``vocab.decode(val_id)`` —
+  produced by ``rr:constant`` (and ``rr:class``/predicates).
+* ``tmpl_id >= TMPL_BASE`` (2): IRI from an ``rr:template`` with a single
+  placeholder; the IRI text is ``template.format(vocab.decode(val_id))``.
+
+Two terms are equal iff their pairs are equal; distinct templates are assumed
+not to collide textually (standard in RML practice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.relalg import Table, Vocab
+
+TMPL_LITERAL = 0
+TMPL_CONSTANT = 1
+TMPL_BASE = 2
+
+RDF_TYPE = "rdf:type"
+
+TRIPLE_ATTRS = ("s_t", "s_v", "p", "o_t", "o_v")
+
+
+@dataclasses.dataclass(frozen=True)
+class TermMap:
+    """rr:subjectMap / rr:objectMap — one of reference/template/constant."""
+
+    kind: str  # 'reference' | 'template' | 'constant'
+    attr: Optional[str] = None        # for reference/template
+    template: Optional[str] = None    # for template (single {placeholder})
+    constant: Optional[object] = None  # for constant
+
+    def __post_init__(self):
+        if self.kind not in ("reference", "template", "constant"):
+            raise ValueError(f"bad TermMap kind {self.kind!r}")
+        if self.kind in ("reference", "template") and self.attr is None:
+            raise ValueError(f"{self.kind} TermMap needs attr")
+        if self.kind == "template" and self.template is None:
+            raise ValueError("template TermMap needs template string")
+
+    @property
+    def referenced_attr(self) -> Optional[str]:
+        return self.attr if self.kind in ("reference", "template") else None
+
+    def signature(self) -> Tuple:
+        """Merge-compatibility signature — attr *names* excluded (Rule 3
+        merges maps whose attrs differ only in name)."""
+        if self.kind == "reference":
+            return ("reference",)
+        if self.kind == "template":
+            return ("template", self.template)
+        return ("constant", self.constant)
+
+
+@dataclasses.dataclass(frozen=True)
+class RefObjectMap:
+    """rr:parentTriplesMap + rr:joinCondition (single child==parent pair)."""
+
+    parent_map: str
+    child_attr: str
+    parent_attr: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PredicateObjectMap:
+    predicate: str
+    object: Union[TermMap, RefObjectMap]
+
+    @property
+    def is_join(self) -> bool:
+        return isinstance(self.object, RefObjectMap)
+
+
+@dataclasses.dataclass(frozen=True)
+class TripleMap:
+    """One RML triples map (a GAV conjunctive rule in the paper's algebra)."""
+
+    name: str
+    source: str                      # key into DIS.sources
+    subject: TermMap
+    subject_class: Optional[str] = None   # rr:class -> (s, rdf:type, class)
+    poms: Tuple[PredicateObjectMap, ...] = ()
+
+    @property
+    def join_poms(self) -> List[PredicateObjectMap]:
+        return [p for p in self.poms if p.is_join]
+
+    @property
+    def has_join(self) -> bool:
+        return any(p.is_join for p in self.poms)
+
+
+@dataclasses.dataclass
+class DIS:
+    """A data integration system: sources S (+extensions) and rules M.
+
+    ``O`` (the unified schema) is implicit: ``classes()`` / ``properties()``
+    enumerate the signature induced by the rules, as in GAV.
+    """
+
+    sources: Dict[str, Table]
+    maps: List[TripleMap]
+    vocab: Vocab
+    templates: Dict[str, int] = dataclasses.field(default_factory=dict)
+    null_code: Optional[int] = None
+    # names of sources known to be projected+deduplicated already (MapSDI
+    # provenance — makes the transformation rules idempotent)
+    preprocessed: set = dataclasses.field(default_factory=set)
+
+    def template_id(self, template: str) -> int:
+        tid = self.templates.get(template)
+        if tid is None:
+            tid = TMPL_BASE + len(self.templates)
+            self.templates[template] = tid
+        return tid
+
+    def map_by_name(self, name: str) -> TripleMap:
+        for m in self.maps:
+            if m.name == name:
+                return m
+        raise KeyError(f"no triple map named {name!r}")
+
+    # -- unified schema O ---------------------------------------------------
+    def classes(self) -> List[str]:
+        return sorted({m.subject_class for m in self.maps if m.subject_class})
+
+    def properties(self) -> List[str]:
+        return sorted({p.predicate for m in self.maps for p in m.poms})
+
+    def copy(self) -> "DIS":
+        return DIS(sources=dict(self.sources), maps=list(self.maps),
+                   vocab=self.vocab, templates=dict(self.templates),
+                   null_code=self.null_code,
+                   preprocessed=set(self.preprocessed))

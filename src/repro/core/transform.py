@@ -1,0 +1,205 @@
+"""MapSDI Transformation Rules 1–3 and the fixpoint driver.
+
+Rewrites ``DIS_G = <O, S, M>`` into ``DIS'_G = <O, S', M'>`` with
+``RDFize(DIS) == RDFize(DIS')`` (set semantics) and less work for the
+semantification engine:
+
+* Rule 1 (projection of attributes) — join-free maps get a projected +
+  deduplicated copy of their source restricted to the referenced attrs.
+* Rule 2 (pushing projections into joins) — the same projection applied to
+  the child and parent sources of join conditions, keeping the ``Z̄`` set
+  (head attrs + join attrs) of the formalization.
+* Rule 3 (merging sources with equivalent attributes) — join-free maps with
+  equal heads over different sources are merged: project each source to the
+  referenced attrs under canonical role names, union, dedup; the maps
+  collapse into one.
+
+After each rewrite the new sources are **materialized and shrunk to fit**
+(host sync), mirroring the paper's pre-processed files (its Table 1 reports
+exactly these reduced sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.relalg import Table, distinct, project_as, union
+
+from .analyze import (merge_groups, referenced_attrs, sorted_reference_poms)
+from .schema import (DIS, PredicateObjectMap, RefObjectMap, TermMap,
+                     TripleMap)
+
+
+def _round_cap(n: int, mult: int = 8) -> int:
+    return max(mult, ((int(n) + mult - 1) // mult) * mult)
+
+
+def shrink_to_fit(table: Table, mult: int = 8) -> Table:
+    """Materialize a table at capacity == round_up(count) (host sync)."""
+    n = int(table.count)
+    cap = _round_cap(n, mult)
+    data = np.asarray(table.data)[:n]
+    return Table.from_codes(data, table.attrs, cap)
+
+
+@dataclasses.dataclass
+class TransformStats:
+    rule1_applications: int = 0
+    rule2_applications: int = 0
+    rule3_merges: int = 0
+    source_rows_before: Dict[str, int] = dataclasses.field(default_factory=dict)
+    source_rows_after: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Rules 1 & 2: projection (+dedup) pushdown
+# ---------------------------------------------------------------------------
+
+def apply_projection(dis: DIS, stats: Optional[TransformStats] = None) -> DIS:
+    """Rules 1 and 2. Each map's source is replaced by
+    ``δ(π_{referenced}(S))``; identical (source, attr-set) projections are
+    shared between maps. Maps are rewritten in place (attr names survive,
+    so only ``TripleMap.source`` changes)."""
+    needed = referenced_attrs(dis)
+    out = dis.copy()
+    shared: Dict[Tuple[str, Tuple[str, ...]], str] = {}
+    new_maps: List[TripleMap] = []
+    for tm in dis.maps:
+        attrs = tuple(sorted(needed[tm.name]))
+        src = dis.sources[tm.source]
+        if tm.source in dis.preprocessed and attrs == tuple(sorted(src.attrs)):
+            new_maps.append(tm)  # already in projected+dedup'd form
+            continue
+        key = (tm.source, attrs)
+        if key not in shared:
+            proj = distinct(project_as(src, [(a, a) for a in attrs]))
+            proj = shrink_to_fit(proj)
+            name = f"{tm.source}__pi_" + "_".join(attrs)
+            out.sources[name] = proj
+            out.preprocessed.add(name)
+            shared[key] = name
+            if stats is not None:
+                if tm.has_join:
+                    stats.rule2_applications += 1
+                else:
+                    stats.rule1_applications += 1
+        new_maps.append(dataclasses.replace(tm, source=shared[key]))
+    out.maps = new_maps
+    # drop now-unreferenced originals
+    used = {m.source for m in out.maps}
+    out.sources = {k: v for k, v in out.sources.items() if k in used}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 3: merging sources with equivalent attributes
+# ---------------------------------------------------------------------------
+
+def _join_parents(dis: DIS) -> Set[str]:
+    return {p.object.parent_map for m in dis.maps for p in m.poms
+            if isinstance(p.object, RefObjectMap)}
+
+
+def apply_merge(dis: DIS, stats: Optional[TransformStats] = None) -> DIS:
+    """Rule 3 on every mergeable group. Maps that serve as join parents are
+    conservatively kept separate (their names are referenced by other maps).
+    Canonical role attrs are ``__m0`` (subject) and ``__m{i}`` for the i-th
+    (predicate-sorted) object reference."""
+    parents = _join_parents(dis)
+    out = dis.copy()
+    merged_any = False
+    for gi, group in enumerate(merge_groups(dis)):
+        group = [tm for tm in group if tm.name not in parents]
+        if len(group) < 2:
+            continue
+        lead = group[0]
+        roles: List[Tuple[str, str]] = []  # (role_name, lead attr) template
+        if lead.subject.referenced_attr:
+            roles.append(("__m0", "subject"))
+        ref_poms_lead = sorted_reference_poms(lead)
+        canon_poms: List[PredicateObjectMap] = []
+        for r, (idx, term) in enumerate(ref_poms_lead):
+            pom = lead.poms[idx]
+            if term.kind == "constant":
+                canon_poms.append(pom)
+            else:
+                role = f"__m{r + 1}"
+                roles.append((role, f"pom{r}"))
+                canon_poms.append(PredicateObjectMap(
+                    predicate=pom.predicate,
+                    object=dataclasses.replace(term, attr=role)))
+
+        # project every member source to the role schema, union + dedup
+        merged: Optional[Table] = None
+        for tm in group:
+            spec: List[Tuple[str, str]] = []
+            if tm.subject.referenced_attr:
+                spec.append((tm.subject.referenced_attr, "__m0"))
+            ref_poms = sorted_reference_poms(tm)
+            r_nonconst = 0
+            for idx, term in ref_poms:
+                if term.kind == "constant":
+                    continue
+                spec.append((term.attr, f"__m{r_nonconst + 1}"))
+                r_nonconst += 1
+            part = project_as(dis.sources[tm.source], spec)
+            merged = part if merged is None else union(merged, part)
+        assert merged is not None
+        merged = shrink_to_fit(distinct(merged))
+        merged_name = f"merged_{gi}_" + "_".join(tm.name for tm in group)
+
+        subject = (dataclasses.replace(lead.subject, attr="__m0")
+                   if lead.subject.referenced_attr else lead.subject)
+        merged_map = TripleMap(
+            name=f"TM_merged_{gi}", source=merged_name, subject=subject,
+            subject_class=lead.subject_class, poms=tuple(canon_poms))
+
+        out.sources[merged_name] = merged
+        out.preprocessed.add(merged_name)
+        group_names = {tm.name for tm in group}
+        out.maps = [m for m in out.maps if m.name not in group_names]
+        out.maps.append(merged_map)
+        merged_any = True
+        if stats is not None:
+            stats.rule3_merges += 1
+    if merged_any:
+        used = {m.source for m in out.maps} | {
+            out.map_by_name(p.object.parent_map).source
+            for m in out.maps for p in m.poms
+            if isinstance(p.object, RefObjectMap)}
+        out.sources = {k: v for k, v in out.sources.items() if k in used}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixpoint driver
+# ---------------------------------------------------------------------------
+
+def _dis_signature(dis: DIS) -> Tuple:
+    from .rml import triple_map_to_json
+    maps_sig = tuple(sorted(str(triple_map_to_json(m)) for m in dis.maps))
+    src_sig = tuple(sorted((k, v.attrs, v.capacity, int(v.count))
+                           for k, v in dis.sources.items()))
+    return maps_sig, src_sig
+
+
+def apply_mapsdi(dis: DIS, max_iters: int = 8,
+                 stats: Optional[TransformStats] = None
+                 ) -> Tuple[DIS, TransformStats]:
+    """Rules 1–3 to a fixpoint (the paper applies them "until a fixed point
+    over S' and M' is reached")."""
+    stats = stats or TransformStats()
+    stats.source_rows_before = {k: int(v.count) for k, v in dis.sources.items()}
+    cur = dis
+    prev_sig = None
+    for _ in range(max_iters):
+        cur = apply_merge(cur, stats)
+        cur = apply_projection(cur, stats)
+        sig = _dis_signature(cur)
+        if sig == prev_sig:
+            break
+        prev_sig = sig
+    stats.source_rows_after = {k: int(v.count) for k, v in cur.sources.items()}
+    return cur, stats

@@ -1,0 +1,6 @@
+"""Data substrate: synthetic genomics-like sources + the KG->token pipeline."""
+from .synthetic import (fig4_gene_source, fig5_join_dis, make_group_a_dis,
+                        make_group_b_dis, make_motivating_dis)
+
+__all__ = ["fig4_gene_source", "fig5_join_dis", "make_group_a_dis",
+           "make_group_b_dis", "make_motivating_dis"]

@@ -1,0 +1,9 @@
+from .sharding import (AxisRules, ParamSpec, abstract_params, init_params,
+                       logical_sharding, param_shardings, spec_tree_map,
+                       DEFAULT_RULES, FSDP_RULES)
+
+__all__ = [
+    "AxisRules", "ParamSpec", "abstract_params", "init_params",
+    "logical_sharding", "param_shardings", "spec_tree_map",
+    "DEFAULT_RULES", "FSDP_RULES",
+]

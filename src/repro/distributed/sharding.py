@@ -1,0 +1,194 @@
+"""Logical-axis sharding: ParamSpec trees -> NamedShardings.
+
+Model definitions never name mesh axes. Every parameter is declared as a
+:class:`ParamSpec` carrying *logical* axis names (``("layers", "embed",
+"ffn")`` ...); an :class:`AxisRules` table maps logical names to mesh axes
+(MaxText-style), so the same model runs data-parallel, tensor-parallel,
+FSDP, or any mix by swapping rule tables — the foundation of the dry-run
+matrix and of the §Perf hillclimbs (a hillclimb step is usually one rule
+edit).
+
+Conventions:
+
+* a logical axis mapped to ``None`` is replicated;
+* a logical axis may map to a *tuple* of mesh axes (e.g. batch ->
+  ``("pod", "data")``);
+* rules are ordered: the first rule whose mesh axes are all still unused
+  by the current parameter wins (prevents double-sharding one mesh axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter: shape + dtype + logical axes + init."""
+
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"          # 'normal' | 'zeros' | 'ones' | 'scaled'
+    init_scale: float = 0.02
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical_axes):
+            raise ValueError(
+                f"shape {self.shape} vs logical_axes {self.logical_axes}")
+
+    def abstract(self, sharding=None) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype, sharding=sharding)
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        scale = self.init_scale
+        if self.init == "scaled":  # 1/sqrt(fan_in) on the last axis
+            fan_in = self.shape[-1] if len(self.shape) else 1
+            scale = float(fan_in) ** -0.5
+        return (jax.random.normal(key, self.shape, jnp.float32)
+                * scale).astype(self.dtype)
+
+
+def spec_tree_map(fn: Callable[[ParamSpec], object], specs):
+    """tree_map over a pytree of ParamSpecs (dataclass leaves)."""
+    return jax.tree_util.tree_map(
+        fn, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(specs, rng: jax.Array):
+    """Materialize a ParamSpec tree into arrays (smoke tests / examples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [s.materialize(k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs, mesh: Optional[Mesh] = None,
+                    rules: Optional["AxisRules"] = None):
+    """ShapeDtypeStruct tree (optionally sharded) — the dry-run input."""
+    if mesh is None:
+        return spec_tree_map(lambda s: s.abstract(), specs)
+    assert rules is not None
+    return spec_tree_map(
+        lambda s: s.abstract(NamedSharding(mesh, rules.spec_for(s))), specs)
+
+
+# ---------------------------------------------------------------------------
+# axis rules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Ordered (logical_axis -> mesh axes) table."""
+
+    rules: Tuple[Tuple[str, MeshAxes], ...]
+
+    def with_overrides(self, *overrides: Tuple[str, MeshAxes]) -> "AxisRules":
+        """New table with ``overrides`` taking precedence (prepended)."""
+        return AxisRules(tuple(overrides) + self.rules)
+
+    def candidates(self, logical: str) -> Sequence[MeshAxes]:
+        return [m for l, m in self.rules if l == logical]
+
+    def spec_for(self, spec_or_axes) -> P:
+        """PartitionSpec for a ParamSpec (or raw logical-axes tuple)."""
+        axes = (spec_or_axes.logical_axes
+                if isinstance(spec_or_axes, ParamSpec) else spec_or_axes)
+        used: set = set()
+        out = []
+        for logical in axes:
+            assigned: MeshAxes = None
+            if logical is not None:
+                for mesh_axes in self.candidates(logical):
+                    if mesh_axes is None:
+                        assigned = None
+                        break
+                    tup = ((mesh_axes,) if isinstance(mesh_axes, str)
+                           else tuple(mesh_axes))
+                    if not (set(tup) & used):
+                        assigned = tup if len(tup) > 1 else tup[0]
+                        used.update(tup)
+                        break
+            out.append(assigned)
+        # trim trailing Nones (canonical PartitionSpec form)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+def logical_sharding(mesh: Mesh, rules: AxisRules,
+                     *logical_axes: Optional[str]) -> NamedSharding:
+    """NamedSharding for an activation given its logical axes."""
+    return NamedSharding(mesh, rules.spec_for(tuple(logical_axes)))
+
+
+def param_shardings(specs, mesh: Mesh, rules: AxisRules):
+    """Tree of NamedShardings matching a ParamSpec tree."""
+    return spec_tree_map(
+        lambda s: NamedSharding(mesh, rules.spec_for(s)), specs)
+
+
+# ---------------------------------------------------------------------------
+# standard rule tables
+# ---------------------------------------------------------------------------
+#
+# Logical axes used by the model zoo:
+#   batch       input batch                  -> (pod, data)
+#   seq         sequence (activations)       -> None (or model under SP)
+#   embed       d_model / residual stream    -> None (or data under FSDP)
+#   heads       q heads                      -> model
+#   kv_heads    k/v heads                    -> model
+#   head_dim    per-head dim                 -> None
+#   ffn         MLP hidden                   -> model
+#   vocab       embedding/unembedding rows   -> model
+#   expert      MoE expert dim               -> model
+#   expert_ffn  per-expert hidden            -> None (or data under FSDP)
+#   layers      scan-stacked layer dim       -> None (never sharded)
+#   conv/state  small recurrent dims         -> None
+
+DEFAULT_RULES = AxisRules((
+    ("batch", ("pod", "data")),
+    ("batch", "data"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("ffn", "model"),
+    ("vocab", "model"),
+    ("expert", "model"),
+    ("seq", None),
+    ("embed", None),
+    ("expert_ffn", None),
+))
+
+# FSDP: parameters additionally sharded over the within-pod data axis on a
+# non-"model" dim; XLA inserts the per-layer all-gather. Used by >=20B
+# configs where params+optimizer would not fit otherwise.
+FSDP_RULES = DEFAULT_RULES.with_overrides(
+    ("embed", "data"),
+    ("expert_ffn", "data"),
+)
+
+
+def batch_sharding(mesh: Mesh, rules: AxisRules) -> NamedSharding:
+    return logical_sharding(mesh, rules, "batch", "seq")
+
+
+def make_rules(fsdp: bool = False,
+               overrides: Sequence[Tuple[str, MeshAxes]] = ()) -> AxisRules:
+    base = FSDP_RULES if fsdp else DEFAULT_RULES
+    return base.with_overrides(*overrides) if overrides else base

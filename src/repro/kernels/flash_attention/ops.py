@@ -1,0 +1,30 @@
+"""Dispatching wrapper: Pallas flash attention on TPU, jnp oracle on CPU."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    kv_len: Optional[int] = None,
+                    use_pallas: Optional[bool] = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            kv_len=kv_len, block_q=block_q, block_k=block_k,
+            interpret=not _on_tpu())
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale,
+                         kv_len=kv_len)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / GQA).
+
+Also the path the models take on CPU (the dry-run lowers this; XLA fuses it
+reasonably). Shapes: q [B, H, S, D], k/v [B, KH, S, D] with H % KH == 0.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+MASK_VALUE = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None,
+                  kv_len: Optional[int] = None) -> jax.Array:
+    b, h, s_q, d = q.shape
+    _, kh, s_k, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    scale = (d ** -0.5) if scale is None else scale
+
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(s_q)[:, None]
+    k_pos = jnp.arange(s_k)[None, :]
+    # when s_q < s_k (decode), align q to the END of the kv timeline
+    offset = (kv_len if kv_len is not None else s_k) - s_q
+    q_abs = q_pos + offset
+    mask = jnp.ones((s_q, s_k), dtype=bool)
+    if causal:
+        mask &= q_abs >= k_pos
+    if window is not None and window > 0:
+        mask &= (q_abs - k_pos) < window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    scores = jnp.where(mask[None, None], scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import mamba2_ssd
+from .ref import ssd_chunked, ssd_scan_ref
+
+__all__ = ["mamba2_ssd", "ssd_chunked", "ssd_scan_ref"]

@@ -1,0 +1,32 @@
+"""Dispatching wrapper for the Mamba2 SSD recurrence."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .mamba2 import mamba2_ssd_pallas
+from .ref import ssd_chunked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mamba2_ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+               c: jax.Array, state: Optional[jax.Array] = None, *,
+               chunk: int = 64, use_pallas: Optional[bool] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD. x [B,H,T,P]; dt [B,H,T]; a [H]; b/c [B,T,N]. The Pallas
+    path handles the zero-initial-state (train/prefill) case; carried-state
+    calls (decode) use the chunked jnp path."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas and state is None and x.shape[2] % chunk == 0:
+        la = dt.astype(jnp.float32) * a.astype(jnp.float32)[None, :, None]
+        xdt = (x.astype(jnp.float32)
+               * dt.astype(jnp.float32)[..., None]).astype(x.dtype)
+        return mamba2_ssd_pallas(xdt, la, b, c, chunk=chunk,
+                                 interpret=not _on_tpu())
+    return ssd_chunked(x, dt, a, b, c, state, chunk=chunk)

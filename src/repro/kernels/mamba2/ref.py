@@ -1,0 +1,107 @@
+"""Oracles for the Mamba2 SSD (state-space dual) recurrence.
+
+Per head (headdim P, state N), scalar decay per step ``a_t = exp(dt_t A)``::
+
+    h_t = a_t h_{t-1} + B_t (dt_t x_t)^T        h: [N, P]
+    y_t = C_t^T h_t
+
+``ssd_scan_ref`` is the exact per-token oracle; ``ssd_chunked`` is the
+chunk-parallel matrix form (intra-chunk batched matmuls on the MXU +
+log-depth associative scan across chunks) used as the model compute path.
+B/C are shared across the heads of a group (ngroups=1 here): [B, T, N].
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """x [B,H,T,P]; dt [B,H,T]; a (log-decay coef A) [H]; b/c [B,T,N].
+    Returns (y [B,H,T,P], final state [B,H,N,P])."""
+    bb, h, t, p = x.shape
+    n = b.shape[-1]
+    if state is None:
+        state = jnp.zeros((bb, h, n, p), jnp.float32)
+    la = dt.astype(jnp.float32) * a.astype(jnp.float32)[None, :, None]
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    def step(s, inp):
+        xdt_t, la_t, b_t, c_t = inp      # [B,H,P], [B,H], [B,N], [B,N]
+        s = (jnp.exp(la_t)[..., None, None] * s
+             + b_t[:, None, :, None] * xdt_t[:, :, None, :])
+        y = jnp.einsum("bn,bhnp->bhp", c_t, s)
+        return s, y
+
+    xs = (jnp.moveaxis(xdt, 2, 0), jnp.moveaxis(la, 2, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    state, ys = lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype), state
+
+
+def _chunk_body(xdt, la, b, c):
+    """One chunk: xdt [L,P], la [L], b/c [L,N] (f32). Returns
+    (y_intra [L,P], decay_tot scalar, state_delta [N,P], q [L,N])."""
+    l = xdt.shape[0]
+    cum = jnp.cumsum(la)                               # inclusive [L]
+    # intra-chunk scores: s<=t, weight exp(cum[t]-cum[s])
+    diff = cum[:, None] - cum[None, :]                 # [L,L]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+    scores = (c @ b.T) * decay
+    y = scores @ xdt
+    # chunk-state transition: h_out = exp(cum[-1]) h_in + delta
+    delta = (b * jnp.exp(cum[-1] - cum)[:, None]).T @ xdt   # [N,P]
+    q = c * jnp.exp(cum)[:, None]                      # reads h_in
+    return y, jnp.exp(cum[-1]), delta, q
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, state: Optional[jax.Array] = None,
+                chunk: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel SSD; same signature/semantics as the scan oracle."""
+    bb, h, t, p = x.shape
+    n = b.shape[-1]
+    if state is None:
+        state = jnp.zeros((bb, h, n, p), jnp.float32)
+    pad = (-t) % chunk
+    la = dt.astype(jnp.float32) * a.astype(jnp.float32)[None, :, None]
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    tc = (t + pad) // chunk
+
+    def per_head(xdt, la, b, c, s0):
+        # [T,P],[T],[T,N],[T,N],[N,P]
+        xc = xdt.reshape(tc, chunk, p)
+        lc = la.reshape(tc, chunk)
+        bc = b.astype(jnp.float32).reshape(tc, chunk, n)
+        cc = c.astype(jnp.float32).reshape(tc, chunk, n)
+        y0, d, delta, q = jax.vmap(_chunk_body)(xc, lc, bc, cc)
+
+        def combine(s1, s2):
+            d1, m1 = s1
+            d2, m2 = s2
+            return d1 * d2, d2[..., None, None] * m1 + m2
+
+        d_sc, m_sc = lax.associative_scan(combine, (d, delta), axis=0)
+        d_in = jnp.concatenate([jnp.ones((1,)), d_sc[:-1]])
+        m_in = jnp.concatenate([jnp.zeros((1, n, p)), m_sc[:-1]])
+        h_in = d_in[:, None, None] * s0[None] + m_in       # [tc,N,P]
+        y = y0 + jnp.einsum("cln,cnp->clp", q, h_in)
+        s_fin = d_sc[-1] * s0 + m_sc[-1]
+        return y.reshape(tc * chunk, p), s_fin
+
+    y, s_fin = jax.vmap(  # over batch
+        jax.vmap(per_head, in_axes=(0, 0, None, None, 0))  # over heads
+    )(xdt, la, b, c, state)
+    return y[:, :, :t].astype(x.dtype), s_fin

@@ -1,0 +1,5 @@
+from .ops import rowhash
+from .ref import rowhash_ref
+from .rowhash import rowhash_pallas
+
+__all__ = ["rowhash", "rowhash_ref", "rowhash_pallas"]

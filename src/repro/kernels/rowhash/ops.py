@@ -1,0 +1,21 @@
+"""Dispatching wrapper: Pallas on TPU, oracle (or interpret mode) on CPU."""
+from __future__ import annotations
+
+import jax
+
+from .ref import rowhash_ref
+from .rowhash import rowhash_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rowhash(x: jax.Array, *, use_pallas: bool | None = None,
+            block_n: int = 256) -> jax.Array:
+    """[N, K] int32 -> [N] uint32 row hashes (kernel on TPU, ref elsewhere)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return rowhash_pallas(x, block_n=block_n, interpret=not _on_tpu())
+    return rowhash_ref(x)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the row-hash kernel.
+
+FNV/murmur-style 32-bit mixing hash over the columns of an int32 row
+matrix. Used by the distributed dedup to repartition rows so that equal
+rows land on the same shard; collisions are harmless there (the local
+distinct re-checks full rows), but good mixing keeps buckets balanced.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# plain ints (NOT jnp arrays) so Pallas kernels can close over them
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+GOLDEN = 0x9E3779B9
+
+
+def fmix32(x: jax.Array) -> jax.Array:
+    """murmur3 finalizer — avalanche a uint32."""
+    x = x ^ lax.shift_right_logical(x, jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ lax.shift_right_logical(x, jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ lax.shift_right_logical(x, jnp.uint32(16))
+    return x
+
+
+def rowhash_ref(x: jax.Array) -> jax.Array:
+    """[N, K] int32 -> [N] uint32 row hashes."""
+    assert x.ndim == 2
+    n, k = x.shape
+    h = jnp.full((n,), jnp.uint32(FNV_OFFSET), dtype=jnp.uint32)
+    for col in range(k):
+        salt = jnp.uint32((GOLDEN * (col + 1)) & 0xFFFFFFFF)
+        v = fmix32(x[:, col].astype(jnp.uint32) + salt)
+        h = (h ^ v) * jnp.uint32(FNV_PRIME)
+    return fmix32(h)

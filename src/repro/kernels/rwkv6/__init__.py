@@ -1,0 +1,5 @@
+from .ops import rwkv6
+from .ref import rwkv6_chunked, rwkv6_scan_ref
+from .rwkv6 import rwkv6_pallas
+
+__all__ = ["rwkv6", "rwkv6_chunked", "rwkv6_scan_ref", "rwkv6_pallas"]

@@ -1,0 +1,28 @@
+"""Dispatching wrapper for the RWKV6 recurrence."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from .ref import rwkv6_chunked, rwkv6_scan_ref
+from .rwkv6 import rwkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+          u: jax.Array, state: Optional[jax.Array] = None, *,
+          chunk: int = 32, use_pallas: Optional[bool] = None
+          ) -> Tuple[jax.Array, jax.Array]:
+    """RWKV6 time mix. Returns (y, final_state). The Pallas path handles
+    the zero-initial-state (train/prefill) case; carried-state calls
+    (decode) use the chunked jnp path."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas and state is None and r.shape[2] % chunk == 0:
+        return rwkv6_pallas(r, k, v, w, u, chunk=chunk,
+                            interpret=not _on_tpu())
+    return rwkv6_chunked(r, k, v, w, u, state, chunk=chunk)

@@ -1,0 +1,115 @@
+"""Oracles for the RWKV6 (Finch) time-mix recurrence.
+
+Per head (key/value dim N): data-dependent per-channel decay ``w_t`` and
+bonus ``u``::
+
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    y_t     = (S_t + diag(u) k_t v_t^T)^T r_t
+
+``rwkv6_scan_ref`` is the exact per-token ``lax.scan`` oracle.
+``rwkv6_chunked`` is the chunk-parallel matrix form used as the model's
+compute path: intra-chunk work is batched matmuls (MXU-shaped, FLOPs fully
+visible to HLO cost analysis), inter-chunk state is a log-depth
+``associative_scan`` — no sequential while-loop over tokens.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+
+def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array, state: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """r/k/v/w: [B,H,T,N] (w = decay in (0,1)), u: [H,N].
+    Returns (y [B,H,T,N], final state [B,H,N,N])."""
+    b, h, t, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # each [B,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,N,N]
+        y = jnp.einsum("bhi,bhij->bhj",
+                       r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 2, 0) for x in (r, k, v, w))
+    state, ys = lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), state
+
+
+def _chunk_body(r, k, v, w, u):
+    """One chunk, all matrix ops. r/k/v/w: [L,N] f32.
+
+    The intra-chunk exponent ``cum_excl[t] - cum[s]`` is ≤ 0 for every
+    s < t (cum is non-increasing), so computing it as an explicit [L,L,N]
+    log-space difference is unconditionally stable — no clamping, exact
+    w.r.t. the scan oracle. XLA fuses the exp into the reduction."""
+    l, n = r.shape
+    lw = jnp.log(w)
+    cum = jnp.cumsum(lw, axis=0)                 # inclusive  [L,N]
+    cum_excl = cum - lw                          # exclusive
+    diff = cum_excl[:, None, :] - cum[None, :, :]      # [L,L,N], ≤0 for s<t
+    scores = jnp.einsum("tsn,tn,sn->ts", jnp.exp(diff), r, k)
+    mask = jnp.tril(jnp.ones((l, l), bool), k=-1)
+    scores = jnp.where(mask, scores, 0.0)
+    bonus = jnp.sum(r * u * k, axis=-1)          # diag(u) k_t v_t^T term
+    y = scores @ v + bonus[:, None] * v
+    # chunk-level state transition (D, M): S_out = diag(D) S_in + M
+    d_tot = jnp.exp(cum[-1])                     # [N]
+    m = (k * jnp.exp(cum[-1][None, :] - cum)).T @ v   # [N,N]
+    return y, d_tot, m
+
+
+def rwkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                  u: jax.Array, state: Optional[jax.Array] = None,
+                  chunk: int = 32) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel RWKV6 (same signature/semantics as the scan oracle)."""
+    b, h, t, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    # keep log(w) finite when w underflows to 0 (decay saturated anyway)
+    w = jnp.maximum(w, 1e-30)
+    pad = (-t) % chunk
+    if pad:
+        r, k, v = (jnp.pad(x, ((0, 0),) * 2 + ((0, pad), (0, 0)))
+                   for x in (r, k, v))
+        w = jnp.pad(w, ((0, 0),) * 2 + ((0, pad), (0, 0)),
+                    constant_values=1.0)
+    tc = (t + pad) // chunk
+
+    def per_head(r, k, v, w, u, s0):
+        rc, kc, vc, wc = (x.reshape(tc, chunk, n).astype(jnp.float32)
+                          for x in (r, k, v, w))
+        # chunk summaries for the associative inter-chunk scan
+        y0, d, m = jax.vmap(
+            lambda a, b_, c, d_: _chunk_body(a, b_, c, d_, u)
+        )(rc, kc, vc, wc)
+
+        def combine(x1, x2):
+            d1, m1 = x1
+            d2, m2 = x2
+            return d1 * d2, d2[..., :, None] * m1 + m2
+
+        d_sc, m_sc = lax.associative_scan(combine, (d, m), axis=0)
+        # state entering chunk c: scan result of chunks < c, applied to s0
+        d_in = jnp.concatenate([jnp.ones((1, n)), d_sc[:-1]], axis=0)
+        m_in = jnp.concatenate([jnp.zeros((1, n, n)), m_sc[:-1]], axis=0)
+        s_in = d_in[:, :, None] * s0[None] + m_in      # [tc,N,N]
+        # inter-chunk contribution (y0 already has intra + bonus)
+        lw = jnp.log(wc)
+        cum_excl = jnp.cumsum(lw, axis=1) - lw
+        q_t = rc * jnp.exp(cum_excl)
+        y = y0 + jnp.einsum("cln,cnm->clm", q_t, s_in)
+        s_fin = d_sc[-1][:, None] * s0 + m_sc[-1]
+        return y.reshape(tc * chunk, n), s_fin
+
+    y, s_fin = jax.vmap(jax.vmap(per_head))(
+        r, k, v, w, jnp.broadcast_to(u, (b, h, n)), state)
+    return y[:, :, :t].astype(r.dtype), s_fin

@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and the dry-run needs 512 placeholder host devices
+# to build the production meshes. Never set this in conftest/pyproject —
+# smoke tests and benches must keep seeing one device.
+
+"""Multi-pod AOT dry-run: ``.lower().compile()`` the full matrix.
+
+For every (architecture x supported input shape x mesh) cell this script
+builds abstract sharded inputs (:mod:`repro.launch.specs`), lowers the
+appropriate step function (train_step / prefill / serve_step), compiles
+it for the production mesh, and records:
+
+* ``memory_analysis()``  — per-device argument/output/temp bytes (fits?)
+* ``cost_analysis()``    — HLO FLOPs + HBM bytes for §Roofline
+* collective operand bytes by opcode (parsed from the compiled module)
+
+Artifacts land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` and
+are consumed by ``launch/roofline.py`` and ``benchmarks/roofline.py``.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun             # full matrix
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh single --print-hlo
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import collective_bytes_scaled
+from repro.launch.specs import build_cell, lower_cell, model_param_counts
+from repro.models import auto_rules
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+MESHES = ("single", "multi")
+
+
+def _mesh_for(name: str):
+    return mesh_lib.make_production_mesh(multi_pod=(name == "multi"))
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             *, print_hlo: bool = False, keep_hlo: bool = False,
+             rule_overrides=(), unroll: bool = True,
+             cfg_overrides: Optional[Dict[str, object]] = None
+             ) -> Dict[str, object]:
+    """One dry-run cell. ``unroll=True`` (default) unrolls layer scans so
+    ``cost_analysis`` counts every layer (XLA tallies while bodies once);
+    ``unroll=False`` compiles the production scan-over-layers program."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if unroll:
+        cfg = _dc.replace(cfg, unroll_layers=True)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, object] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "status": "skip", "unrolled": unroll,
+    }
+    if not cfg.shape_supported(shape):
+        rec["reason"] = ("no sub-quadratic path"
+                         if shape_name == "long_500k" else "no decode path")
+        return rec
+    mesh = _mesh_for(mesh_name)
+    rules = auto_rules(cfg, mesh, shape)
+    if rule_overrides:
+        rules = rules.with_overrides(*rule_overrides)
+    t0 = time.perf_counter()
+    cell = build_cell(cfg, shape, mesh, rules)
+    lowered = lower_cell(cell)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes_scaled(text)
+
+    rec.update({
+        "status": "ok",
+        "n_devices": mesh.devices.size,
+        "n_microbatches": cell.n_microbatches,
+        "lower_seconds": round(t1 - t0, 3),
+        "compile_seconds": round(t2 - t1, 3),
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "cost": {k: float(v) for k, v in dict(cost or {}).items()
+                 if k in ("flops", "transcendentals", "bytes accessed",
+                          "optimal_seconds")},
+        "collectives": coll.to_dict(),
+        "params": model_param_counts(cfg),
+    })
+    if keep_hlo:
+        rec["hlo_text"] = text
+    if print_hlo:
+        print(text[:20000])
+    return rec
+
+
+def save_record(rec: Dict[str, object], out_dir: str = OUT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    rec = {k: v for k, v in rec.items() if k != "hlo_text"}
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=("single", "multi",
+                                                       "both"))
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--print-hlo", action="store_true")
+    ap.add_argument("--stop-on-error", action="store_true")
+    ap.add_argument("--production-scan", action="store_true",
+                    help="compile the rolled scan-over-layers program "
+                         "(production HLO) instead of the cost-accurate "
+                         "unrolled variant")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = tuple(SHAPES) if args.shape == "all" else (args.shape,)
+    meshes = MESHES if args.mesh == "both" else (args.mesh,)
+    if args.production_scan:           # keep unrolled + scan records apart
+        args.out = args.out.rstrip("/") + "_scan"
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                tag = f"{arch} x {shape} x {mesh_name}"
+                try:
+                    rec = run_cell(arch, shape, mesh_name,
+                                   print_hlo=args.print_hlo,
+                                   unroll=not args.production_scan)
+                except Exception as e:   # record and continue
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[FAIL] {tag}: {e}")
+                    if args.stop_on_error:
+                        save_record(rec, args.out)
+                        raise
+                save_record(rec, args.out)
+                if rec["status"] == "ok":
+                    mem = rec["memory"]
+                    per_dev = (mem.get("argument_size_in_bytes", 0)
+                               + mem.get("temp_size_in_bytes", 0))
+                    print(f"[ok]   {tag}: args+temp/dev = "
+                          f"{per_dev / 2**30:.2f} GiB, "
+                          f"flops/dev = {rec['cost'].get('flops', 0):.3e}, "
+                          f"coll = {rec['collectives']['total_bytes']/2**20:.1f}"
+                          f" MiB ({rec['compile_seconds']:.0f}s compile)")
+                elif rec["status"] == "skip":
+                    print(f"[skip] {tag}: {rec['reason']}")
+    print(f"dry-run complete; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,228 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``collective_bytes(text)`` parses a compiled (per-device, post-partition)
+HLO module and sums **operand** bytes of every collective op, bucketed by
+opcode — the numerator of the roofline collective term. Operand sizes are
+resolved by first indexing every instruction's result type, then looking
+up each collective's operand names.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_ELEM_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one array type like bf16[8,128]{1,0} (layout/suffix optional)
+_ARRAY_RE = re.compile(
+    r"\b(" + "|".join(_ELEM_BYTES) + r")\[([0-9,]*)\]")
+
+# an instruction line: %name = TYPE opcode(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        elem = _ELEM_BYTES[m.group(1)]
+        dims = m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += elem * n
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_op: Dict[str, int]
+    by_op_count: Dict[str, int]
+    cross_pod_bytes: int = -1      # -1 = not classified (single pod)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.by_op.values())
+
+    def to_dict(self) -> Dict[str, object]:
+        d = {"bytes_by_op": dict(self.by_op),
+             "count_by_op": dict(self.by_op_count),
+             "total_bytes": self.total_bytes}
+        if self.cross_pod_bytes >= 0:
+            d["cross_pod_bytes"] = self.cross_pod_bytes
+        return d
+
+
+# --- replica-group parsing (pod-boundary classification) -------------------
+
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*(?:\},\{[^}]*)*)\}\}")
+
+
+def groups_span_boundary(line: str, boundary: int) -> bool:
+    """True if any replica group on this line contains device ids on both
+    sides of ``boundary`` (pod 0 = ids < boundary). Unknown formats are
+    conservatively treated as spanning."""
+    m = _IOTA_RE.search(line)
+    if m:
+        import numpy as _np
+        g, n = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        v = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            v = v.transpose(perm)
+        groups = v.reshape(g, n)
+        return bool(((groups < boundary).any(axis=1)
+                     & (groups >= boundary).any(axis=1)).any())
+    m = _EXPLICIT_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.split(",") if x.strip()]
+            if ids and min(ids) < boundary <= max(ids):
+                return True
+        return False
+    if "replica_groups={}" in line:
+        return True                      # all devices, spans by definition
+    return True
+
+
+def collective_bytes(hlo_text: str,
+                     pod_boundary: Optional[int] = None) -> CollectiveStats:
+    """Sum operand bytes per collective opcode over a compiled module.
+    ``pod_boundary``: classify collectives whose replica groups span the
+    device-id boundary (cross-pod traffic over the slow DCI links)."""
+    # pass 1: instruction name -> result bytes
+    result_bytes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if m:
+            result_bytes[m.group(1)] = _type_bytes(m.group(2))
+
+    by_op: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    by_count: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    cross = 0
+    opnd_re = re.compile(r"%?([\w.\-]+)")
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        base = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        if opcode.endswith("-done"):
+            continue                       # avoid double count of async pairs
+        total = _operand_bytes(line, m.end(), result_bytes, opnd_re)
+        by_op[base] += total
+        by_count[base] += 1
+        if pod_boundary is not None and \
+                groups_span_boundary(line, pod_boundary):
+            cross += total
+    return CollectiveStats(by_op, by_count,
+                           cross if pod_boundary is not None else -1)
+
+
+def _operand_bytes(line: str, start: int, result_bytes: Dict[str, int],
+                   opnd_re) -> int:
+    """Sum result_bytes over the operand names of the instruction on
+    ``line``; ``start`` points just past the opcode (so the instruction
+    NAME — which also contains the opcode string — and tuple result types
+    are never mistaken for the operand list)."""
+    paren = line.find("(", start)
+    if paren < 0:
+        return 0
+    depth, j = 0, paren
+    while j < len(line):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    args = line[paren + 1:j]
+    total = 0
+    for om in opnd_re.finditer(args):
+        name = om.group(1)
+        if name in result_bytes:
+            total += result_bytes[name]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# scan-aware correction
+# ---------------------------------------------------------------------------
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    """Known trip counts of while loops (scan-over-layers), best effort."""
+    return [int(m.group(1)) for m in
+            re.finditer(r"trip_count[=:\s]+(\d+)", hlo_text)]
+
+
+def collective_bytes_scaled(hlo_text: str) -> CollectiveStats:
+    """Like :func:`collective_bytes` but multiplies collectives that live
+    inside a while-loop body by the loop trip count (scan-over-layers
+    executes its body L times; the static HLO lists it once).
+
+    HLO text nests computations as separate blocks; we attribute a
+    collective to a loop if its computation block is referenced as a
+    while body with a known trip count."""
+    # map computation name -> trip count (from while instrs)
+    body_re = re.compile(r"while\(.*?\).*?body=%?([\w.\-]+)", re.S)
+    trip_re = re.compile(r'known_trip_count=\{n="?(\d+)"?\}')
+    comp_trips: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if " while(" in line or " while (" in line:
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            tm = trip_re.search(line)
+            if bm:
+                comp_trips[bm.group(1)] = int(tm.group(1)) if tm else 1
+    # walk blocks; scale collectives inside while bodies
+    result = collective_bytes(hlo_text)       # flat counts
+    if not comp_trips:
+        return result
+    by_op = {c: 0 for c in _COLLECTIVES}
+    by_count = {c: 0 for c in _COLLECTIVES}
+    current_comp: Optional[str] = None
+    comp_header = re.compile(r"^\s*%?([\w.\-]+)\s+\([^)]*\)\s*->")
+    # rebuild result_bytes map (cheap)
+    result_bytes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            result_bytes[m.group(1)] = _type_bytes(m.group(2))
+    opnd_re = re.compile(r"%?([\w.\-]+)")
+    for line in hlo_text.splitlines():
+        hm = comp_header.match(line)
+        if hm and "=" not in line.split("->")[0]:
+            current_comp = hm.group(1)
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        base = next((c for c in _COLLECTIVES
+                     if opcode == c or opcode.startswith(c + "-start")), None)
+        if base is None or opcode.endswith("-done"):
+            continue
+        scale = comp_trips.get(current_comp or "", 1)
+        total = _operand_bytes(line, m.end(), result_bytes, opnd_re)
+        by_op[base] += total * scale
+        by_count[base] += scale
+    return CollectiveStats(by_op, by_count)

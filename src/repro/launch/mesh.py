@@ -1,0 +1,54 @@
+"""Mesh construction for the production pod(s) and local testing.
+
+Importing this module never touches jax device state — meshes are built by
+FUNCTIONS so the dry-run can set ``XLA_FLAGS`` before first jax init.
+
+Production target: TPU v5e pods, 256 chips each, mesh (data=16, model=16);
+the multi-pod configuration adds a leading ``pod`` axis (2 pods = 512
+chips). ``pod`` and ``data`` are both batch-parallel; FSDP weight sharding
+stays *within* a pod so cross-pod ICI traffic is one gradient all-reduce
+per step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """jax.make_mesh with explicit Auto axis types and device slicing (the
+    dry-run forces 512 host devices but the single-pod mesh uses 256)."""
+    n = math.prod(shape)
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    dev_array = np.asarray(devices[:n]).reshape(tuple(shape))
+    return jax.sharding.Mesh(
+        dev_array, tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """The graded production mesh: (16,16) single pod / (2,16,16) two pods."""
+    shape: Tuple[int, ...] = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: Optional[int] = None
+                    ) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests/examples)."""
+    n = jax.device_count()
+    data = data if data is not None else max(1, n // model)
+    return make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~ per exchange direction)
+HBM_BYTES = 16 * 2**30          # 16 GiB HBM per chip

@@ -1,0 +1,119 @@
+"""Generate EXPERIMENTS.md tables from the dry-run / roofline artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..",
+                    "..", "experiments")
+
+
+def load_dir(dirname: str) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ROOT, dirname, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def dryrun_table(records: List[Dict]) -> str:
+    head = ("| arch | shape | mesh | status | args+temp GiB/dev | "
+            "collective MiB/step | compile s |\n"
+            "|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"],
+                                            r["mesh"])):
+        if r.get("status") == "ok":
+            mem = r["memory"]
+            per = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)) / 2**30
+            coll = r["collectives"]["total_bytes"] / 2**20
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                        f"{per:.2f} | {coll:.1f} | "
+                        f"{r.get('compile_seconds', 0):.0f} |")
+        elif r.get("status") == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skip ({r.get('reason', '')}) | — | — | — |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | — | — | — |")
+    return head + "\n".join(rows) + "\n"
+
+
+def roofline_table(records: List[Dict]) -> str:
+    head = ("| arch | shape | compute s | memory s | collective s | "
+            "dominant | useful/HLO | roofline frac | lever |\n"
+            "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip |"
+                        " — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |"
+                        " |")
+            continue
+        t = r["terms_seconds"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2%} | {r['suggestion'][:60]}… |")
+    return head + "\n".join(rows) + "\n"
+
+
+def bench_summary() -> str:
+    out = []
+    for name in ("group_a", "group_b", "table1", "motivating"):
+        path = os.path.join(ROOT, "bench", f"{name}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            rows = json.load(f)
+        if not rows:
+            continue
+        keys = list(rows[0])
+        out.append(f"**{name}**\n")
+        out.append("| " + " | ".join(keys) + " |")
+        out.append("|" + "---|" * len(keys))
+        for r in rows:
+            out.append("| " + " | ".join(str(r.get(k, "")) for k in keys)
+                       + " |")
+        out.append("")
+    return "\n".join(out) + "\n"
+
+
+def inject(md_path: str) -> None:
+    """Replace the marked blocks in EXPERIMENTS.md from artifacts."""
+    with open(md_path) as f:
+        text = f.read()
+
+    def repl(tag: str, body: str, t: str) -> str:
+        b, e = f"<!-- {tag}:BEGIN -->", f"<!-- {tag}:END -->"
+        i, j = t.index(b) + len(b), t.index(e)
+        return t[:i] + "\n" + body + t[j:]
+
+    text = repl("DRYRUN", dryrun_table(load_dir("dryrun_scan")), text)
+    text = repl("ROOFLINE", roofline_table(load_dir("roofline")), text)
+    text = repl("BENCH", bench_summary(), text)
+    with open(md_path, "w") as f:
+        f.write(text)
+    print(f"injected tables into {md_path}")
+
+
+def main() -> None:
+    import sys
+    if "--inject" in sys.argv:
+        md = os.path.join(ROOT, "..", "EXPERIMENTS.md")
+        inject(os.path.abspath(md))
+        return
+    scans = load_dir("dryrun_scan")
+    print(dryrun_table(scans))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""Abstract (ShapeDtypeStruct) inputs per (arch x shape x mesh) cell.
+
+``build_cell`` returns ``(fn, args)`` such that
+``jax.jit(fn).lower(*args)`` is the dry-run for that cell: every leaf of
+``args`` is a weak-type-correct, sharded ShapeDtypeStruct — no device
+allocation ever happens. The same builders power the roofline analysis
+and the perf hillclimbs (a hillclimb edit is usually a rule override
+passed through ``rules``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.sharding import (AxisRules, ParamSpec,
+                                        abstract_params, spec_tree_map)
+from repro.models import get_model
+from repro.models.layers import ShardCtx
+from repro.models.vlm import VIT_DIM
+from repro.serve.decode import make_prefill, make_serve_step
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# optimizer state specs (mirrors optimizer.init exactly)
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(opt_name: str, param_specs: PyTree) -> PyTree:
+    """ParamSpec tree for the optimizer state (same tree structure as
+    ``make_optimizer(name).init(params)``), carrying logical axes so the
+    state shards exactly like its parameter."""
+    def f32(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.logical_axes, jnp.float32, "zeros")
+
+    if opt_name == "adamw":
+        return {"mu": spec_tree_map(f32, param_specs),
+                "nu": spec_tree_map(f32, param_specs),
+                "master": spec_tree_map(f32, param_specs)}
+    if opt_name == "adafactor":
+        def per(s: ParamSpec):
+            if len(s.shape) >= 2:
+                return {"vr": ParamSpec(s.shape[:-1], s.logical_axes[:-1],
+                                        jnp.float32, "zeros"),
+                        "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                        s.logical_axes[:-2]
+                                        + s.logical_axes[-1:],
+                                        jnp.float32, "zeros")}
+            return {"v": f32(s)}
+        return {"v": spec_tree_map(per, param_specs)}
+    raise KeyError(f"unknown optimizer {opt_name!r}")
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+def _sds(mesh: Optional[Mesh], rules: Optional[AxisRules], shape, dtype,
+         *logical) -> jax.ShapeDtypeStruct:
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    sh = NamedSharding(mesh, rules.spec_for(tuple(logical)))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Optional[Mesh],
+                rules: Optional[AxisRules], *, with_labels: bool
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Token (+frontend-stub) input specs for one global batch."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        text = s - cfg.n_prepend
+        out["tokens"] = _sds(mesh, rules, (b, text), jnp.int32,
+                             "batch", "seq")
+        if with_labels:
+            out["labels"] = _sds(mesh, rules, (b, text), jnp.int32,
+                                 "batch", "seq")
+        out["patches"] = _sds(mesh, rules, (b, cfg.n_prepend, VIT_DIM),
+                              jnp.float32, "batch", "seq", None)
+    elif cfg.family == "encdec":
+        out["tokens"] = _sds(mesh, rules, (b, s), jnp.int32, "batch", "seq")
+        if with_labels:
+            out["labels"] = _sds(mesh, rules, (b, s), jnp.int32,
+                                 "batch", "seq")
+        out["frames"] = _sds(mesh, rules, (b, cfg.n_enc_frames, cfg.d_model),
+                             jnp.float32, "batch", "seq", "embed")
+    else:
+        out["tokens"] = _sds(mesh, rules, (b, s), jnp.int32, "batch", "seq")
+        if with_labels:
+            out["labels"] = _sds(mesh, rules, (b, s), jnp.int32,
+                                 "batch", "seq")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One dry-run cell: callable + abstract args (+ metadata)."""
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: Tuple[PyTree, ...]
+    n_microbatches: int = 1
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Optional[Mesh],
+               rules: Optional[AxisRules]) -> Cell:
+    if not cfg.shape_supported(shape):
+        raise ValueError(f"{cfg.name} does not support {shape.name}")
+    ctx = None if mesh is None else ShardCtx(mesh, rules)
+    model = get_model(cfg.family)
+    params = abstract_params(model.param_specs(cfg), mesh, rules)
+
+    if shape.kind == "train":
+        n_shards = 1 if mesh is None else (
+            mesh.shape.get("pod", 1) * mesh.shape.get("data", 1))
+        n_mb = cfg.microbatches(shape, n_shards)
+        opt = make_optimizer(cfg.optimizer)
+        p_specs = model.param_specs(cfg)
+        opt_spec_tree = opt_state_specs(cfg.optimizer, p_specs)
+        use_ef = (cfg.grad_compress_pods and mesh is not None
+                  and mesh.shape.get("pod", 1) > 1 and not cfg.fsdp
+                  and not cfg.fsdp_pods)
+        if use_ef:
+            # POD-DECOUPLED step: shard_map manual over (pod, data) so
+            # the backward produces per-rank gradients and the
+            # hierarchical hook owns the WHOLE sync: reduce-scatter over
+            # `data` (fast ICI) -> int8+EF quantize the 1/|data| shard ->
+            # int16 psum over `pod` (the only DCI transfer) -> all-gather.
+            # A naive quantized full-copy pod-psum moves MORE cross-pod
+            # bytes than GSPMD's own hierarchical all-reduce (measured —
+            # see EXPERIMENTS.md §Perf extras).
+            from jax.sharding import PartitionSpec as P
+            from repro.train.train_step import with_error_feedback
+            n_inner = mesh.shape["data"]
+            opt, hook = with_error_feedback(opt, n_inner)
+
+            def _ef_len(s: ParamSpec) -> int:
+                n = 1
+                for d in s.shape:
+                    n *= d
+                return (n + n_inner - 1) // n_inner
+            n_pods = mesh.shape["pod"]
+            ef_specs = spec_tree_map(
+                lambda s: ParamSpec((n_pods * n_inner * _ef_len(s),),
+                                    ("ef_shard",), jnp.float32, "zeros"),
+                p_specs)
+            opt_spec_tree = {"opt": opt_spec_tree, "ef": ef_specs}
+            rules = rules.with_overrides(("ef_shard", ("pod", "data")))
+            rules_in = rules.with_overrides(("batch", None))
+            ctx_in = ShardCtx(mesh, rules_in)
+            inner0 = make_train_step(cfg, n_microbatches=n_mb,
+                                     optimizer=opt, ctx=ctx_in,
+                                     grad_compress=hook)
+
+            def inner(params, opt_state, batch, step):
+                ef = jax.tree_util.tree_map(lambda e: e.reshape(-1),
+                                            opt_state["ef"])
+                p2, o2, m = inner0(params, dict(opt_state, ef=ef), batch,
+                                   step)
+                o2 = dict(o2, ef=jax.tree_util.tree_map(
+                    lambda e: e[None], o2["ef"]))
+                return p2, o2, m
+
+            rep = jax.tree_util.tree_map(lambda _: P(), p_specs)
+            rep_opt = jax.tree_util.tree_map(
+                lambda _: P(), opt_spec_tree["opt"],
+                is_leaf=lambda x: isinstance(x, ParamSpec))
+            ef_p = spec_tree_map(lambda _: P(("pod", "data")), p_specs)
+            fn = jax.shard_map(
+                inner, mesh=mesh, axis_names={"pod", "data"},
+                in_specs=(rep, {"opt": rep_opt, "ef": ef_p},
+                          {k: P(("pod", "data")) for k in
+                           batch_specs(cfg, shape, None, None,
+                                       with_labels=True)}, P()),
+                out_specs=(rep, {"opt": rep_opt, "ef": ef_p},
+                           {"loss": P(), "grad_norm": P()}),
+                check_vma=False)
+        else:
+            fn = make_train_step(cfg, n_microbatches=n_mb, optimizer=opt,
+                                 ctx=ctx)
+        opt_abs = abstract_params(opt_spec_tree, mesh, rules)
+        batch = batch_specs(cfg, shape, mesh, rules, with_labels=True)
+        step = _sds(mesh, rules, (), jnp.int32)
+        return Cell(cfg.name, shape.name, "train", fn,
+                    (params, opt_abs, batch, step), n_mb,
+                    donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, mesh, rules, with_labels=False)
+        fn = make_prefill(cfg, ctx)
+        return Cell(cfg.name, shape.name, "prefill", fn, (params, batch))
+
+    # decode: one token against a seq_len-deep cache/state
+    cache = abstract_params(
+        model.cache_specs(cfg, shape.global_batch, shape.seq_len),
+        mesh, rules)
+    tokens = _sds(mesh, rules, (shape.global_batch, 1), jnp.int32,
+                  "batch", "seq")
+    fn = make_serve_step(cfg, ctx)
+    return Cell(cfg.name, shape.name, "decode", fn, (params, cache, tokens),
+                donate_argnums=(1,))
+
+
+def lower_cell(cell: Cell):
+    """jit + AOT lower (no execution)."""
+    fn = jax.jit(cell.fn, donate_argnums=cell.donate_argnums)
+    return fn.lower(*cell.args)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def model_param_counts(cfg: ArchConfig) -> Dict[str, float]:
+    """Total / active / non-embedding parameter counts from the spec tree.
+    ``active`` scales expert leaves by top_k / n_experts (MoE); ``body``
+    excludes vocab-axis leaves (the 6ND convention)."""
+    specs = get_model(cfg.family).param_specs(cfg)
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = active = body = body_active = 0.0
+    for s in leaves:
+        n = 1.0
+        for d in s.shape:
+            n *= d
+        frac = 1.0
+        if cfg.n_experts and "expert" in (s.logical_axes or ()):
+            frac = cfg.top_k / cfg.n_experts
+        total += n
+        active += n * frac
+        if "vocab" not in (s.logical_axes or ()):
+            body += n
+            body_active += n * frac
+    return {"total": total, "active": active,
+            "body": body, "body_active": body_active}

@@ -1,0 +1,3 @@
+from .model_zoo import get_model, MODEL_FAMILIES, auto_rules
+
+__all__ = ["get_model", "MODEL_FAMILIES", "auto_rules"]

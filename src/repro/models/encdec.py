@@ -1,0 +1,244 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings [B, n_enc_frames, d_model] (what the two conv
+layers would emit). Encoder: non-causal self-attention, GELU MLP,
+sinusoidal positions. Decoder: causal self-attention + cross-attention to
+the encoder output, learned positions. LayerNorm (with bias) throughout,
+MHA (n_kv_heads == n_heads), no rope — per the Whisper architecture.
+
+Decode state: per-layer self KV cache (grows) + per-layer cross K/V
+(computed once at prefill from the encoder output).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ParamSpec
+from .layers import (Params, ShardCtx, attention, attn_block_unroll,
+                     attn_out, attn_specs, cache_update, constrain, embed,
+                     embed_specs, layer_norm, layer_unroll, mlp, mlp_specs,
+                     sinusoidal_positions, stack_specs, unembed)
+
+
+def _ln(d: int) -> Params:
+    return {"w": ParamSpec((d,), ("embed",), jnp.float32, "ones"),
+            "b": ParamSpec((d,), ("embed",), jnp.float32, "zeros")}
+
+
+def _qkv_noro(p, x, ctx):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = constrain(ctx, q, "batch", "seq", "heads", "head_dim")
+    return (jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1))
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def enc_layer_specs(cfg) -> Params:
+    return {"ln_attn": _ln(cfg.d_model),
+            "attn": attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.d_head),
+            "ln_mlp": _ln(cfg.d_model),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff, gated=False)}
+
+
+def dec_layer_specs(cfg) -> Params:
+    s = enc_layer_specs(cfg)
+    s["ln_cross"] = _ln(cfg.d_model)
+    s["cross"] = attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.d_head)
+    return s
+
+
+def param_specs(cfg) -> Params:
+    return {
+        "embed": embed_specs(cfg.vocab_padded, cfg.d_model, tied=True),
+        "dec_pos": ParamSpec((32768, cfg.d_model), (None, "embed"),
+                             jnp.bfloat16, "normal", 0.01),
+        "enc": {"layers": stack_specs(enc_layer_specs(cfg), cfg.n_layers),
+                "ln_f": _ln(cfg.d_model)},
+        "dec": {"layers": stack_specs(dec_layer_specs(cfg), cfg.n_layers),
+                "ln_f": _ln(cfg.d_model)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def encode(cfg, params: Params, frames: jax.Array,
+           ctx: Optional[ShardCtx] = None) -> jax.Array:
+    """frames [B, n_enc_frames, d_model] (stub frontend output)."""
+    x = frames.astype(jnp.bfloat16)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(
+        x.dtype)
+    x = constrain(ctx, x, "batch", "seq_sp", "embed")
+
+    def step(x, p):
+        h = layer_norm(x, p["ln_attn"]["w"], p["ln_attn"]["b"])
+        q, k, v = _qkv_noro(p["attn"], h, ctx)
+        o = attention(q, k, v, causal=False,
+                      use_pallas=cfg.use_pallas or False)
+        x = x + attn_out(p["attn"], o, ctx)
+        h = layer_norm(x, p["ln_mlp"]["w"], p["ln_mlp"]["b"])
+        x = x + mlp(p["mlp"], h, ctx, act=jax.nn.gelu)
+        return constrain(ctx, x, "batch", "seq_sp", "embed"), None
+
+    x, _ = lax.scan(_remat(cfg, step), x, params["enc"]["layers"],
+                    unroll=layer_unroll(cfg))
+    return layer_norm(x, params["enc"]["ln_f"]["w"],
+                      params["enc"]["ln_f"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+def _dec_layer(cfg, p, x, enc_kv, self_kv, index, kv_len, ctx):
+    """enc_kv = (ek, ev) cross K/V [B,H,Senc,Dh]; self_kv None (train, full
+    causal) or (ck, cv) cache slices."""
+    h = layer_norm(x, p["ln_attn"]["w"], p["ln_attn"]["b"])
+    q, k, v = _qkv_noro(p["attn"], h, ctx)
+    if self_kv is None:
+        o = attention(q, k, v, causal=True,
+                      use_pallas=cfg.use_pallas or False)
+        new_self = None
+    else:
+        ck, cv = cache_update(self_kv[0], self_kv[1], k, v, index)
+        ck = constrain(ctx, ck, "batch", "kv_heads", "kv_seq", "head_dim")
+        cv = constrain(ctx, cv, "batch", "kv_heads", "kv_seq", "head_dim")
+        o = attention(q, ck, cv, causal=True, kv_len=kv_len,
+                      unroll=attn_block_unroll(cfg,
+                                               max(1, ck.shape[2] // 1024)),
+                      use_pallas=False)
+        new_self = (ck, cv)
+    x = x + attn_out(p["attn"], o, ctx)
+
+    h = layer_norm(x, p["ln_cross"]["w"], p["ln_cross"]["b"])
+    cq = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"])
+    cq = jnp.moveaxis(cq, 2, 1)
+    o = attention(cq, enc_kv[0], enc_kv[1], causal=False, use_pallas=False)
+    x = x + attn_out(p["cross"], o, ctx)
+
+    h = layer_norm(x, p["ln_mlp"]["w"], p["ln_mlp"]["b"])
+    x = x + mlp(p["mlp"], h, ctx, act=jax.nn.gelu)
+    return constrain(ctx, x, "batch", "seq", "embed"), new_self
+
+
+def cross_kv(cfg, params: Params, enc_out: jax.Array, ctx) \
+        -> Tuple[jax.Array, jax.Array]:
+    """Cross K/V for all decoder layers: [L, B, H, Senc, Dh] each."""
+    def per_layer(p):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"])
+        return jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1)
+
+    return jax.vmap(per_layer)(params["dec"]["layers"])
+
+
+def decode_train(cfg, params, tokens, enc_out, ctx) -> jax.Array:
+    x = embed(params["embed"], tokens, ctx)
+    x = x + params["dec_pos"][:x.shape[1]][None].astype(x.dtype)
+    x = constrain(ctx, x, "batch", "seq_sp", "embed")
+    ek, ev = cross_kv(cfg, params, enc_out, ctx)
+
+    def step(x, xs):
+        p, k, v = xs
+        y, _ = _dec_layer(cfg, p, x, (k, v), None, None, None, ctx)
+        return y, None
+
+    x, _ = lax.scan(_remat(cfg, step), x, (params["dec"]["layers"], ek, ev),
+                    unroll=layer_unroll(cfg))
+    x = layer_norm(x, params["dec"]["ln_f"]["w"], params["dec"]["ln_f"]["b"])
+    return unembed(params["embed"], x, ctx)
+
+
+def apply(cfg, params: Params, tokens: jax.Array,
+          frames: Optional[jax.Array] = None,
+          ctx: Optional[ShardCtx] = None) -> jax.Array:
+    if frames is None:
+        raise ValueError("enc-dec apply() needs `frames`")
+    return decode_train(cfg, params, tokens, encode(cfg, params, frames, ctx),
+                        ctx)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg, batch: int, max_len: int) -> Params:
+    L = cfg.n_layers
+    kv = ParamSpec((L, batch, cfg.n_kv_heads, max_len, cfg.d_head),
+                   ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+                   jnp.bfloat16, "zeros")
+    ckv = ParamSpec((L, batch, cfg.n_kv_heads, cfg.n_enc_frames, cfg.d_head),
+                    ("layers", "batch", "kv_heads", None, "head_dim"),
+                    jnp.bfloat16, "zeros")
+    return {"k": kv, "v": kv, "ek": ckv, "ev": ckv,
+            "index": ParamSpec((), (), jnp.int32, "zeros")}
+
+
+def _run_decoder(cfg, params, tokens, cache, index, ctx):
+    s = tokens.shape[1]
+    x = embed(params["embed"], tokens, ctx)
+    pos = jnp.take(params["dec_pos"],
+                   jnp.minimum(index + jnp.arange(s), 32767), axis=0)
+    x = x + pos[None].astype(x.dtype)
+    kv_len = index + s
+
+    def step(x, xs):
+        p, ck, cv, ek, ev = xs
+        y, new_self = _dec_layer(cfg, p, x, (ek, ev), (ck, cv), index,
+                                 kv_len, ctx)
+        return y, new_self
+
+    x, (nk, nv) = lax.scan(
+        step, x, (params["dec"]["layers"], cache["k"], cache["v"],
+                  cache["ek"], cache["ev"]), unroll=layer_unroll(cfg))
+    x = layer_norm(x, params["dec"]["ln_f"]["w"], params["dec"]["ln_f"]["b"])
+    logits = unembed(params["embed"], x[:, -1:], ctx)
+    return logits, nk, nv
+
+
+def prefill(cfg, params, tokens, frames: Optional[jax.Array] = None,
+            ctx: Optional[ShardCtx] = None):
+    if frames is None:
+        raise ValueError("enc-dec prefill() needs `frames`")
+    b, s = tokens.shape
+    enc_out = encode(cfg, params, frames, ctx)
+    ek, ev = cross_kv(cfg, params, enc_out, ctx)
+    cache = {"k": jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, s, cfg.d_head),
+                            jnp.bfloat16),
+             "v": jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, s, cfg.d_head),
+                            jnp.bfloat16),
+             "ek": ek.astype(jnp.bfloat16), "ev": ev.astype(jnp.bfloat16),
+             "index": jnp.zeros((), jnp.int32)}
+    logits, nk, nv = _run_decoder(cfg, params, tokens, cache,
+                                  jnp.zeros((), jnp.int32), ctx)
+    return logits, {"k": nk, "v": nv, "ek": cache["ek"], "ev": cache["ev"],
+                    "index": jnp.full((), s, jnp.int32)}
+
+
+def decode_step(cfg, params, cache, tokens, ctx=None):
+    index = cache["index"]
+    logits, nk, nv = _run_decoder(cfg, params, tokens, cache, index, ctx)
+    return logits, {"k": nk, "v": nv, "ek": cache["ek"], "ev": cache["ev"],
+                    "index": index + tokens.shape[1]}

@@ -1,0 +1,489 @@
+"""Shared building blocks for the model zoo.
+
+Everything is functional: a layer is ``(param_specs builder, forward fn)``;
+parameters travel as plain dict pytrees so they flow through
+``jax.eval_shape`` (dry-run), ``jax.jit`` donation, and checkpointing
+without a module system.
+
+Sharding is *logical*: model code annotates activations via
+:class:`ShardCtx` (mesh + AxisRules); with ``ctx=None`` (CPU smoke tests)
+the constraints are no-ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import AxisRules, ParamSpec
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# sharding context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Threaded through forward passes to place activation constraints."""
+
+    mesh: Mesh
+    rules: AxisRules
+
+    def constrain(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        spec = self.rules.spec_for(tuple(logical))
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def constrain(ctx: Optional[ShardCtx], x: jax.Array,
+              *logical: Optional[str]) -> jax.Array:
+    return x if ctx is None else ctx.constrain(x, *logical)
+
+
+def layer_unroll(cfg):
+    """lax.scan ``unroll`` argument for scans over layers: fully unrolled
+    when the config asks for it (dry-run cost fidelity / overlap), else a
+    rolled while loop (O(1) HLO)."""
+    return True if getattr(cfg, "unroll_layers", False) else 1
+
+
+def attn_block_unroll(cfg, n_blocks: int) -> int:
+    """Partial-unroll factor for the blockwise-attention kv scan; capped so
+    long-context decode (512 blocks) cannot explode the HLO."""
+    if not getattr(cfg, "unroll_layers", False):
+        return 1
+    cap = 32
+    u = min(n_blocks, cap)
+    while n_blocks % u:
+        u -= 1
+    return max(u, 1)
+
+
+# ---------------------------------------------------------------------------
+# spec helpers
+# ---------------------------------------------------------------------------
+
+def stack_specs(specs, n: int):
+    """Prepend a scan-stacked ``layers`` dim to every ParamSpec in a tree."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical_axes,
+                            s.dtype, s.init, s.init_scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def dense_spec(d_in: int, d_out: int, ax_in: str, ax_out: str,
+               dtype=jnp.bfloat16) -> ParamSpec:
+    return ParamSpec((d_in, d_out), (ax_in, ax_out), dtype, "scaled")
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_specs(d: int) -> ParamSpec:
+    # rms_norm weight stored as offset-from-1 (init zeros)
+    return ParamSpec((d,), ("embed",), jnp.float32, "zeros")
+
+
+# ---------------------------------------------------------------------------
+# rotary embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: [..., S, n_heads, d_head]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                               # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [..., S, d/2]
+    sin = jnp.sin(ang)[..., None, :]                           # [..., S, 1, d/2]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d, 2, jnp.float32) / d)
+    ang = pos * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (blockwise jnp path; Pallas kernel on TPU)
+# ---------------------------------------------------------------------------
+
+MASK_VALUE = -1e30
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[jax.Array | int] = None,
+                        kv_len: Optional[jax.Array | int] = None,
+                        scale: Optional[float] = None,
+                        block_k: int = 1024, unroll: int = 1) -> jax.Array:
+    """Online-softmax attention scanning kv blocks (the flash ref in pure
+    jnp — O(S·block) live memory, so 32k/500k prefill lowers without an
+    S x S buffer). ``window`` may be a traced scalar (0/None => full);
+    that is what lets gemma3's 5:1 local:global pattern live in ONE scan
+    over layers.
+
+    q [B,H,Sq,D]; k/v [B,KH,Sk,D]; Sk % block_k == 0 (caller pads).
+    """
+    b, h, s_q, d = q.shape
+    _, kh, s_k, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    scale = (d ** -0.5) if scale is None else scale
+    kv_len = jnp.minimum(s_k, s_k if kv_len is None else kv_len)
+    window = 0 if window is None else window
+    q_off = kv_len - s_q  # q rows sit at the END of the kv timeline
+    if s_k % block_k:     # pad kv to a block multiple; kv_len masks the tail
+        pad = block_k - s_k % block_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        s_k += pad
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, kh, group * s_q, d)
+    n_blocks = s_k // block_k
+    kb = jnp.moveaxis(k.reshape(b, kh, n_blocks, block_k, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, kh, n_blocks, block_k, d), 2, 0)
+
+    q_pos = q_off + jnp.arange(s_q, dtype=jnp.int32)
+    win = jnp.asarray(window, jnp.int32)
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kc, vc, start = blk
+        s = jnp.einsum("bgqd,bgkd->bgqk", qf, kc.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        k_pos = start + jnp.arange(block_k, dtype=jnp.int32)
+        qp = jnp.tile(q_pos, group)[:, None]
+        mask = k_pos[None, :] < kv_len
+        if causal:
+            mask &= qp >= k_pos[None, :]
+        mask &= (win <= 0) | ((qp - k_pos[None, :]) < win)
+        s = jnp.where(mask[None, None], s, MASK_VALUE)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1)
+        pv = jnp.einsum("bgqk,bgkd->bgqd", p, vc.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    starts = jnp.arange(n_blocks, dtype=jnp.int32) * block_k
+    init = (jnp.full((b, kh, group * s_q), MASK_VALUE),
+            jnp.zeros((b, kh, group * s_q)),
+            jnp.zeros((b, kh, group * s_q, d)))
+    # checkpoint the block body: without it, scan-AD stacks every block's
+    # f32 scores [B,H,Sq,block_k] for the backward — O(S_k·S_q) memory,
+    # the exact thing flash attention exists to avoid (one whisper layer:
+    # 20 GiB). With it, backward recomputes scores per block from the
+    # saved (kc, vc, carry) — the jnp path becomes memory-flash.
+    (m, l, acc), _ = lax.scan(jax.checkpoint(step), init,
+                              (kb, vb, starts), unroll=unroll)
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(b, h, s_q, d)
+    return out.astype(q.dtype)
+
+
+def banded_local_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           window: int, block: int = 1024) -> jax.Array:
+    """Sliding-window causal attention that only COMPUTES the band.
+
+    The generic blockwise path must execute every kv block and mask,
+    because the window may be traced (gemma3's 5:1 pattern lives in one
+    scan). When the window is STATIC (the period-structured scan below),
+    each q block attends exactly its own + the previous kv block
+    (requires ``window <= block``): S·2·block work instead of S·S — 16×
+    less attention compute at 32k. Scanned over q blocks with a
+    checkpointed body, so backward memory is one band of scores.
+
+    q/k/v: [B, H|KH, S, D], S % block == 0, full self-attention shapes.
+    """
+    b, h, s, d = q.shape
+    _, kh, _, _ = k.shape
+    group = h // kh
+    assert s % block == 0 and 0 < window <= block, (s, block, window)
+    nb = s // block
+    scale = d ** -0.5
+
+    qb = (q.astype(jnp.float32) * scale).reshape(b, kh, group, nb, block, d)
+    qb = jnp.moveaxis(qb, 3, 0)                       # [nb,B,KH,G,block,D]
+    kb = k.reshape(b, kh, nb, block, d)
+    vb = v.reshape(b, kh, nb, block, d)
+    zero = jnp.zeros_like(kb[:, :, :1])
+    k_band = jnp.concatenate([
+        jnp.concatenate([zero, kb[:, :, :-1]], axis=2), kb], axis=3)
+    v_band = jnp.concatenate([
+        jnp.concatenate([zero, vb[:, :, :-1]], axis=2), vb], axis=3)
+    k_band = jnp.moveaxis(k_band, 2, 0)               # [nb,B,KH,2block,D]
+    v_band = jnp.moveaxis(v_band, 2, 0)
+
+    q_pos = jnp.arange(block, dtype=jnp.int32)
+    k_pos = jnp.arange(2 * block, dtype=jnp.int32) - block
+
+    def body(carry, xs):
+        qi, ki, vi, i = xs
+        sc = jnp.einsum("bkgqd,bksd->bkgqs", qi, ki.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        qp = q_pos[:, None]
+        kp = k_pos[None, :]
+        mask = (qp >= kp) & (qp - kp < window) & \
+            ((kp >= 0) | (i > 0))                     # block -1 pad rows
+        sc = jnp.where(mask[None, None, None], sc, MASK_VALUE)
+        p = jax.nn.softmax(sc, axis=-1)
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        y = jnp.einsum("bkgqs,bksd->bkgqd", p, vi,
+                       preferred_element_type=jnp.float32)
+        return carry, y
+
+    _, ys = lax.scan(jax.checkpoint(body), (),
+                     (qb, k_band, v_band,
+                      jnp.arange(nb, dtype=jnp.int32)))
+    out = jnp.moveaxis(ys, 0, 3)                      # [B,KH,G,nb,block,D]
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def dense_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           window=None, kv_len=None,
+                           scale: Optional[float] = None) -> jax.Array:
+    """Decode-shape attention (s_q small): ONE masked einsum over the full
+    kv timeline instead of a scan of kv-block dynamic-slices. With the
+    cache's seq dim sharded over `model`, GSPMD lowers the softmax to
+    partial max/sum + an all-reduce of [B,H,s_q] stats and the PV product
+    to a partial sum + one [B,H,s_q,D] all-reduce — no per-block
+    dynamic_slice across shards (which forces involuntary full
+    rematerialization in the SPMD partitioner)."""
+    b, h, s_q, d = q.shape
+    _, kh, s_k, _ = k.shape
+    group = h // kh
+    scale = (d ** -0.5) if scale is None else scale
+    kv_len = s_k if kv_len is None else kv_len
+    qf = (q.astype(jnp.float32) * scale).reshape(b, kh, group * s_q, d)
+    # k/v stay bf16 on the wire; the MXU accumulates in f32 (an explicit
+    # .astype would materialize a second full-cache-sized f32 copy)
+    s = jnp.einsum("bgqd,bgkd->bgqk", qf, k,
+                   preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(s_k, dtype=jnp.int32)
+    q_pos = kv_len - s_q + jnp.arange(s_q, dtype=jnp.int32)
+    qp = jnp.tile(q_pos, group)[:, None]
+    mask = (k_pos[None, :] < kv_len) & (qp >= k_pos[None, :])
+    if window is not None:
+        win = jnp.asarray(window, jnp.int32)
+        mask &= (win <= 0) | ((qp - k_pos[None, :]) < win)
+    s = jnp.where(mask[None, None], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)
+    out = jnp.einsum("bgqk,bgkd->bgqd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, s_q, d).astype(q.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window=None, kv_len=None,
+              scale: Optional[float] = None, use_pallas: bool = False,
+              block_k: int = 1024, unroll: int = 1) -> jax.Array:
+    """Model-facing attention: Pallas flash kernel on TPU (static window
+    only), dense one-einsum path for decode shapes, blockwise jnp
+    otherwise."""
+    if q.shape[2] <= 8 and causal and k.shape[2] > q.shape[2]:
+        return dense_decode_attention(q, k, v, window=window, kv_len=kv_len,
+                                      scale=scale)
+    if use_pallas and isinstance(window, (int, type(None))):
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, kv_len=kv_len)
+    bk = min(block_k, k.shape[2])
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               kv_len=kv_len, scale=scale, block_k=bk,
+                               unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + forward, GQA + qk_norm + rope + cache)
+# ---------------------------------------------------------------------------
+
+def attn_specs(d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+               qk_norm: bool = False) -> Params:
+    s: Params = {
+        "wq": ParamSpec((d_model, n_heads, d_head),
+                        ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": ParamSpec((d_model, n_kv_heads, d_head),
+                        ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": ParamSpec((d_model, n_kv_heads, d_head),
+                        ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wo": ParamSpec((n_heads, d_head, d_model),
+                        ("heads", "head_dim", "embed"), init="scaled"),
+    }
+    if qk_norm:
+        s["q_norm"] = ParamSpec((d_head,), ("head_dim",), jnp.float32, "zeros")
+        s["k_norm"] = ParamSpec((d_head,), ("head_dim",), jnp.float32, "zeros")
+    return s
+
+
+def attn_qkv(p: Params, x: jax.Array, positions: jax.Array, *,
+             rope_theta: float = 10000.0, use_rope: bool = True,
+             ctx: Optional[ShardCtx] = None
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B,S,D] -> q [B,H,S,Dh], k/v [B,KH,S,Dh] (rope + qk_norm applied)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = constrain(ctx, q, "batch", "seq", "heads", "head_dim")
+    k = constrain(ctx, k, "batch", "seq", "kv_heads", "head_dim")
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return (jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1))
+
+
+def attn_out(p: Params, o: jax.Array,
+             ctx: Optional[ShardCtx] = None) -> jax.Array:
+    """o [B,H,S,Dh] -> [B,S,D]."""
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+    return constrain(ctx, out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d_model: int, d_ff: int, gated: bool = True) -> Params:
+    s: Params = {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "ffn"), init="scaled"),
+        "w_down": ParamSpec((d_ff, d_model), ("ffn", "embed"), init="scaled"),
+    }
+    if gated:
+        s["w_gate"] = ParamSpec((d_model, d_ff), ("embed", "ffn"),
+                                init="scaled")
+    return s
+
+
+def mlp(p: Params, x: jax.Array, ctx: Optional[ShardCtx] = None,
+        act=jax.nn.silu) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = act(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = act(up.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(ctx, h, "batch", "seq", "ffn")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(ctx, out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def embed_specs(vocab_padded: int, d_model: int,
+                tied: bool = True) -> Params:
+    s: Params = {"embedding": ParamSpec((vocab_padded, d_model),
+                                        ("vocab", "embed"), init="normal")}
+    if not tied:
+        s["unembed"] = ParamSpec((d_model, vocab_padded),
+                                 ("embed", "vocab"), init="scaled")
+    return s
+
+
+def embed(p: Params, tokens: jax.Array,
+          ctx: Optional[ShardCtx] = None) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    return constrain(ctx, x, "batch", "seq", "embed")
+
+
+def unembed(p: Params, x: jax.Array,
+            ctx: Optional[ShardCtx] = None) -> jax.Array:
+    if "unembed" in p:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embedding"])
+    return constrain(ctx, logits, "batch", "seq", "vocab")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None,
+                 vocab_size: Optional[int] = None) -> jax.Array:
+    """Mean next-token cross-entropy. ``vocab_size`` masks padded vocab
+    rows; safe when the vocab dim is sharded (logsumexp lowers to partial
+    reduce + all-reduce under GSPMD)."""
+    lf = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < lf.shape[-1]:
+        pad = jnp.arange(lf.shape[-1]) >= vocab_size
+        lf = jnp.where(pad, MASK_VALUE, lf)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# KV cache helpers (decode)
+# ---------------------------------------------------------------------------
+
+def kv_cache_specs(n_layers: int, batch: int, n_kv_heads: int, max_len: int,
+                   d_head: int, dtype=jnp.bfloat16) -> Params:
+    """Ring-buffer style cache: stacked [L, B, KH, S, Dh] + write index.
+
+    The cache ``seq`` dim is sharded over the ``model`` axis when kv_heads
+    cannot use it (sequence-sharded decode attention: GSPMD turns the
+    softmax/PV over the sharded dim into partial reductions + all-reduce)."""
+    kv = ParamSpec((n_layers, batch, n_kv_heads, max_len, d_head),
+                   ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+                   dtype, "zeros")
+    return {"k": kv, "v": kv, "index": ParamSpec((), (), jnp.int32, "zeros")}
+
+
+def cache_update(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array,
+                 v: jax.Array, index: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Write k/v [B,KH,S_new,Dh] at position ``index`` of one layer's cache
+    [B,KH,S_max,Dh] (dynamic_update_slice keeps it in-place under jit)."""
+    zero = jnp.zeros((), jnp.int32)
+    k = k.astype(cache_k.dtype)
+    v = v.astype(cache_v.dtype)
+    ck = lax.dynamic_update_slice(cache_k, k, (zero, zero, index, zero))
+    cv = lax.dynamic_update_slice(cache_v, v, (zero, zero, index, zero))
+    return ck, cv

@@ -1,0 +1,246 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay) — rwkv6-7b.
+
+Block = time-mix (WKV6 recurrence over [H, N, N] states) + channel-mix
+(token-shift gated MLP). Both mixes use token-shift (previous-token
+lerp); the decay ``w`` is data-dependent via a small LoRA
+(the Finch contribution). Recurrent serving state per layer is
+(shift_tmix [B,D], shift_cmix [B,D], wkv [B,H,N,N]) — O(1) in sequence
+length, which is why this arch runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ParamSpec
+from repro.kernels.rwkv6 import rwkv6 as wkv6
+from .layers import (Params, ShardCtx, constrain, embed, embed_specs,
+                     layer_norm, layer_unroll, norm_specs, stack_specs,
+                     unembed)
+
+
+def _use_pallas(cfg) -> Optional[bool]:
+    return cfg.use_pallas
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _ln_specs(d: int) -> Params:
+    return {"w": ParamSpec((d,), ("embed",), jnp.float32, "ones"),
+            "b": ParamSpec((d,), ("embed",), jnp.float32, "zeros")}
+
+
+def layer_specs(cfg) -> Params:
+    d = cfg.d_model
+    n = cfg.ssm_head_dim                    # head size (64)
+    h = d // n
+    lora = 64
+    return {
+        "ln1": _ln_specs(d), "ln2": _ln_specs(d),
+        "tmix": {
+            # token-shift lerp ratios per stream
+            "mu_r": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+            "mu_k": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+            "mu_v": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+            "mu_w": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+            "mu_g": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+            "w_r": ParamSpec((d, d), ("embed", "heads_flat"), init="scaled"),
+            "w_k": ParamSpec((d, d), ("embed", "heads_flat"), init="scaled"),
+            "w_v": ParamSpec((d, d), ("embed", "heads_flat"), init="scaled"),
+            "w_g": ParamSpec((d, d), ("embed", "heads_flat"), init="scaled"),
+            "w_o": ParamSpec((d, d), ("heads_flat", "embed"), init="scaled"),
+            # data-dependent decay LoRA (Finch): w = exp(-exp(w0 + B tanh(A x)))
+            "decay_a": ParamSpec((d, lora), ("embed", None), init="scaled"),
+            "decay_b": ParamSpec((lora, d), (None, "heads_flat"),
+                                 init="scaled"),
+            "decay_w0": ParamSpec((d,), ("heads_flat",), jnp.float32,
+                                  "zeros"),
+            "bonus_u": ParamSpec((h, n), ("heads", "state"), jnp.float32,
+                                 "zeros"),
+            "ln_x_w": ParamSpec((d,), ("heads_flat",), jnp.float32, "ones"),
+            "ln_x_b": ParamSpec((d,), ("heads_flat",), jnp.float32, "zeros"),
+        },
+        "cmix": {
+            "mu_k": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+            "mu_r": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+            "w_k": ParamSpec((d, cfg.d_ff), ("embed", "ffn"), init="scaled"),
+            "w_v": ParamSpec((cfg.d_ff, d), ("ffn", "embed"), init="scaled"),
+            "w_r": ParamSpec((d, d), ("embed", "embed_out"), init="scaled"),
+        },
+    }
+
+
+def param_specs(cfg) -> Params:
+    return {
+        "embed": embed_specs(cfg.vocab_padded, cfg.d_model, tied=False),
+        "ln_in": _ln_specs(cfg.d_model),
+        "layers": stack_specs(layer_specs(cfg), cfg.n_layers),
+        "ln_f": _ln_specs(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x[t] -> x[t-1]; position 0 gets ``prev`` (or zeros)."""
+    shifted = jnp.roll(x, 1, axis=1)
+    first = (jnp.zeros_like(x[:, :1]) if prev is None
+             else prev[:, None].astype(x.dtype))
+    return shifted.at[:, :1].set(first)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def time_mix(cfg, p: Params, x: jax.Array, shift_state, wkv_state,
+             ctx: Optional[ShardCtx]
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, d = x.shape
+    n = cfg.ssm_head_dim
+    h = d // n
+    xx = _shift(x, shift_state)
+    xr, xk, xv, xw, xg = (_lerp(x, xx, p[f"mu_{c}"]) for c in "rkvwg")
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"])
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"])
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"])
+    g = jnp.einsum("bsd,de->bse", xg, p["w_g"])
+    # Finch data-dependent decay
+    dd = jnp.einsum("bsl,le->bse",
+                    jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["decay_a"])),
+                    p["decay_b"])
+    w = jnp.exp(-jnp.exp(
+        (p["decay_w0"].astype(jnp.float32) + dd.astype(jnp.float32))
+        .clip(-10.0, 5.0)))
+
+    def heads(t):
+        return constrain(ctx, t.reshape(b, s, h, n).transpose(0, 2, 1, 3),
+                         "batch", "heads", "seq", "state")
+
+    y, wkv_out = wkv6(heads(r), heads(k), heads(v),
+                      heads(w.astype(x.dtype)), p["bonus_u"],
+                      state=wkv_state, use_pallas=_use_pallas(cfg))
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    y = layer_norm(y, p["ln_x_w"], p["ln_x_b"])   # per-token group norm
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_o"])
+    return constrain(ctx, out, "batch", "seq", "embed"), x[:, -1], wkv_out
+
+
+def channel_mix(cfg, p: Params, x: jax.Array, shift_state,
+                ctx: Optional[ShardCtx]) -> Tuple[jax.Array, jax.Array]:
+    xx = _shift(x, shift_state)
+    xk = _lerp(x, xx, p["mu_k"])
+    xr = _lerp(x, xx, p["mu_r"])
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    k = constrain(ctx, k, "batch", "seq", "ffn")
+    v = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["w_r"]).astype(jnp.float32))
+    return (v * r.astype(v.dtype)), x[:, -1]
+
+
+def block_fwd(cfg, p: Params, x, state, ctx):
+    """state = None (train) or (shift_t [B,D], shift_c [B,D], wkv [B,H,N,N])."""
+    st, sc, wkv_in = state if state is not None else (None, None, None)
+    y, st_out, wkv_out = time_mix(cfg, p["tmix"],
+                                  layer_norm(x, p["ln1"]["w"], p["ln1"]["b"]),
+                                  st, wkv_in, ctx)
+    x = x + y
+    y, sc_out = channel_mix(cfg, p["cmix"],
+                            layer_norm(x, p["ln2"]["w"], p["ln2"]["b"]),
+                            sc, ctx)
+    x = x + y
+    x = constrain(ctx, x, "batch", "seq_sp", "embed")
+    return x, (st_out, sc_out, wkv_out)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def apply(cfg, params: Params, tokens: jax.Array,
+          ctx: Optional[ShardCtx] = None) -> jax.Array:
+    x = embed(params["embed"], tokens, ctx)
+    x = layer_norm(x, params["ln_in"]["w"], params["ln_in"]["b"])
+    x = constrain(ctx, x, "batch", "seq_sp", "embed")
+
+    def step(carry, p):
+        y, _ = block_fwd(cfg, p, carry, None, ctx)
+        return y, None
+
+    x, _ = lax.scan(_remat(cfg, step), x, params["layers"],
+                    unroll=layer_unroll(cfg))
+    x = layer_norm(x, params["ln_f"]["w"], params["ln_f"]["b"])
+    return unembed(params["embed"], x, ctx)
+
+
+def cache_specs(cfg, batch: int, max_len: int) -> Params:
+    d = cfg.d_model
+    n = cfg.ssm_head_dim
+    h = d // n
+    L = cfg.n_layers
+    return {
+        "shift_t": ParamSpec((L, batch, d), ("layers", "batch", "embed"),
+                             jnp.bfloat16, "zeros"),
+        "shift_c": ParamSpec((L, batch, d), ("layers", "batch", "embed"),
+                             jnp.bfloat16, "zeros"),
+        "wkv": ParamSpec((L, batch, h, n, n),
+                         ("layers", "batch", "heads", "state", "state"),
+                         jnp.float32, "zeros"),
+        "index": ParamSpec((), (), jnp.int32, "zeros"),
+    }
+
+
+def _run_with_state(cfg, params, tokens, cache, ctx):
+    x = embed(params["embed"], tokens, ctx)
+    x = layer_norm(x, params["ln_in"]["w"], params["ln_in"]["b"])
+
+    def step(carry, xs):
+        p, st, sc, wkv = xs
+        y, (st2, sc2, wkv2) = block_fwd(cfg, p, carry, (st, sc, wkv), ctx)
+        return y, (st2, sc2, wkv2)
+
+    x, (st, sc, wkv) = lax.scan(
+        step, x, (params["layers"], cache["shift_t"], cache["shift_c"],
+                  cache["wkv"]), unroll=layer_unroll(cfg))
+    x = layer_norm(x, params["ln_f"]["w"], params["ln_f"]["b"])
+    logits = unembed(params["embed"], x[:, -1:], ctx)
+    new_cache = {"shift_t": st.astype(cache["shift_t"].dtype),
+                 "shift_c": sc.astype(cache["shift_c"].dtype),
+                 "wkv": wkv,
+                 "index": cache["index"] + tokens.shape[1]}
+    return logits, new_cache
+
+
+def prefill(cfg, params, tokens, ctx=None):
+    b = tokens.shape[0]
+    zero = {
+        "shift_t": jnp.zeros((cfg.n_layers, b, cfg.d_model), jnp.bfloat16),
+        "shift_c": jnp.zeros((cfg.n_layers, b, cfg.d_model), jnp.bfloat16),
+        "wkv": jnp.zeros((cfg.n_layers, b, cfg.d_model // cfg.ssm_head_dim,
+                          cfg.ssm_head_dim, cfg.ssm_head_dim), jnp.float32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+    return _run_with_state(cfg, params, tokens, zero, ctx)
+
+
+def decode_step(cfg, params, cache, tokens, ctx=None):
+    return _run_with_state(cfg, params, tokens, cache, ctx)

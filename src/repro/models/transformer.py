@@ -1,0 +1,286 @@
+"""Dense GQA transformer family (internlm2 / qwen3 / gemma3 / mistral /
+the internvl2 text backbone).
+
+One ``lax.scan`` over stacked layer params keeps the HLO O(1) in depth.
+Heterogeneous attention patterns (gemma3's 5 local : 1 global) are encoded
+as a *traced* per-layer ``window`` array so the scan stays homogeneous —
+local layers get ``window=window_size``, global layers ``window=0`` (no
+window). Remat policy wraps the scan body.
+
+Three entry points per the shape matrix: ``apply`` (train forward),
+``prefill`` (no-grad forward materializing the KV cache), ``decode_step``
+(one token against the cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ParamSpec
+from .layers import (Params, ShardCtx, attention, attn_block_unroll,
+                     attn_out, attn_qkv, attn_specs, banded_local_attention,
+                     cache_update, constrain, embed, embed_specs,
+                     kv_cache_specs, layer_unroll, mlp, mlp_specs,
+                     norm_specs, rms_norm, stack_specs, unembed)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg) -> Params:
+    return {
+        "attn": attn_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.d_head, qk_norm=cfg.qk_norm),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+        "ln_attn": norm_specs(cfg.d_model),
+        "ln_mlp": norm_specs(cfg.d_model),
+    }
+
+
+def param_specs(cfg) -> Params:
+    return {
+        "embed": embed_specs(cfg.vocab_padded, cfg.d_model,
+                             tied=cfg.tied_embeddings),
+        "layers": stack_specs(layer_specs(cfg), cfg.n_layers),
+        "ln_f": norm_specs(cfg.d_model),
+    }
+
+
+def layer_windows(cfg) -> jnp.ndarray:
+    """Per-layer sliding-window widths (0 = full/global attention).
+
+    gemma3 pattern: every (local_global+1)-th layer is global, the rest use
+    ``window_size`` — layers i with (i+1) % (local_global+1) == 0 global."""
+    if not cfg.local_global:
+        return jnp.zeros((cfg.n_layers,), jnp.int32)
+    period = cfg.local_global + 1
+    idx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    return jnp.where((idx + 1) % period == 0, 0, cfg.window_size)
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _use_pallas(cfg) -> bool:
+    if cfg.use_pallas is not None:
+        return cfg.use_pallas
+    return jax.default_backend() == "tpu"
+
+
+def layer_fwd(cfg, p: Params, x: jax.Array, positions: jax.Array,
+              window: jax.Array, ctx: Optional[ShardCtx]) -> jax.Array:
+    """Full-sequence causal layer (train / prefill compute)."""
+    h = rms_norm(x, p["ln_attn"])
+    q, k, v = attn_qkv(p["attn"], h, positions, rope_theta=cfg.rope_theta,
+                       ctx=ctx)
+    o = attention(q, k, v, causal=True, window=window,
+                  use_pallas=_use_pallas(cfg),
+                  unroll=attn_block_unroll(cfg, max(1, k.shape[2] // 1024)))
+    x = x + attn_out(p["attn"], o, ctx)
+    h = rms_norm(x, p["ln_mlp"])
+    x = x + mlp(p["mlp"], h, ctx)
+    return constrain(ctx, x, "batch", "seq_sp", "embed")
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def scan_layers(cfg, layers: Params, x: jax.Array, body) -> jax.Array:
+    """scan(remat(body)) over stacked params + per-layer windows."""
+    windows = layer_windows(cfg)
+
+    def step(carry, xs):
+        p, w = xs
+        return body(carry, p, w), None
+
+    step = _remat(cfg, step)
+    x, _ = lax.scan(step, x, (layers, windows), unroll=layer_unroll(cfg))
+    return x
+
+
+def _banded_ok(cfg, seq_len: int) -> bool:
+    if not (cfg.local_global and cfg.banded_local and cfg.window_size):
+        return False
+    if cfg.seq_shard_activations:      # banded reshapes the seq dim
+        return False
+    block = max(cfg.window_size, min(1024, seq_len))
+    return seq_len % block == 0 and seq_len > cfg.window_size
+
+
+def _local_layer_fwd(cfg, p: Params, x: jax.Array, positions: jax.Array,
+                     ctx: Optional[ShardCtx]) -> jax.Array:
+    """Local layer with the STATIC-window banded kernel (computes only
+    the band; the generic path executes every kv block and masks)."""
+    h = rms_norm(x, p["ln_attn"])
+    q, k, v = attn_qkv(p["attn"], h, positions, rope_theta=cfg.rope_theta,
+                       ctx=ctx)
+    block = max(cfg.window_size, min(1024, q.shape[2]))
+    o = banded_local_attention(q, k, v, window=cfg.window_size,
+                               block=block)
+    x = x + attn_out(p["attn"], o, ctx)
+    h = rms_norm(x, p["ln_mlp"])
+    x = x + mlp(p["mlp"], h, ctx)
+    return constrain(ctx, x, "batch", "seq_sp", "embed")
+
+
+def scan_layers_banded(cfg, layers: Params, x: jax.Array,
+                       positions: jax.Array,
+                       ctx: Optional[ShardCtx]) -> jax.Array:
+    """Period-structured scan for local:global patterns (gemma3): the
+    stacked params are reshaped into [n_periods, period, ...] (pure
+    slicing — checkpoint layout unchanged); each period runs
+    ``local_global`` banded-local layers + one full-attention layer, so
+    the local window is STATIC inside its sub-scan. Trailing non-full
+    periods (gemma3: 34 = 5·6 + 4) run as a banded tail scan."""
+    p_len = cfg.local_global + 1
+    n_full = (cfg.n_layers // p_len) * p_len
+    n_periods = n_full // p_len
+    unroll = layer_unroll(cfg)
+
+    def local_step(carry, pp):
+        return _remat(cfg, lambda c, q: (_local_layer_fwd(cfg, q, c,
+                                                          positions, ctx),
+                                         None))(carry, pp)
+
+    def global_step(carry, pp):
+        zero = jnp.zeros((), jnp.int32)      # window 0 = full attention
+        return _remat(cfg, lambda c, q: (layer_fwd(cfg, q, c, positions,
+                                                   zero, ctx), None)
+                      )(carry, pp)
+
+    main = jax.tree_util.tree_map(
+        lambda a: a[:n_full].reshape((n_periods, p_len) + a.shape[1:]),
+        layers)
+
+    def period(carry, pp):
+        locs = jax.tree_util.tree_map(lambda a: a[:p_len - 1], pp)
+        glob = jax.tree_util.tree_map(lambda a: a[p_len - 1], pp)
+        carry, _ = lax.scan(local_step, carry, locs, unroll=unroll)
+        carry, _ = global_step(carry, glob)
+        return carry, None
+
+    x, _ = lax.scan(period, x, main, unroll=unroll)
+    if n_full < cfg.n_layers:                # trailing local layers
+        tail = jax.tree_util.tree_map(lambda a: a[n_full:], layers)
+        x, _ = lax.scan(local_step, x, tail, unroll=unroll)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def apply(cfg, params: Params, tokens: jax.Array,
+          ctx: Optional[ShardCtx] = None,
+          inputs_embeds: Optional[jax.Array] = None) -> jax.Array:
+    """tokens [B,S] -> logits [B,S,V_padded]. ``inputs_embeds`` (vlm) is
+    prepended before the token embeddings."""
+    x = embed(params["embed"], tokens, ctx)
+    if inputs_embeds is not None:
+        x = jnp.concatenate([inputs_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x = constrain(ctx, x, "batch", "seq_sp", "embed")
+
+    if _banded_ok(cfg, x.shape[1]):
+        x = scan_layers_banded(cfg, params["layers"], x, positions, ctx)
+    else:
+        def body(x, p, w):
+            return layer_fwd(cfg, p, x, positions, w, ctx)
+
+        x = scan_layers(cfg, params["layers"], x, body)
+    x = rms_norm(x, params["ln_f"])
+    return unembed(params["embed"], x, ctx)
+
+
+def cache_specs(cfg, batch: int, max_len: int) -> Params:
+    return kv_cache_specs(cfg.n_layers, batch, cfg.n_kv_heads, max_len,
+                          cfg.d_head)
+
+
+def _decode_layer(cfg, p: Params, ck: jax.Array, cv: jax.Array,
+                  x: jax.Array, positions: jax.Array, index: jax.Array,
+                  kv_len, window: jax.Array, ctx: Optional[ShardCtx]
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One layer against one layer's cache slice; returns (x, ck, cv)."""
+    h = rms_norm(x, p["ln_attn"])
+    q, k, v = attn_qkv(p["attn"], h, positions, rope_theta=cfg.rope_theta,
+                       ctx=ctx)
+    ck, cv = cache_update(ck, cv, k, v, index)
+    ck = constrain(ctx, ck, "batch", "kv_heads", "kv_seq", "head_dim")
+    cv = constrain(ctx, cv, "batch", "kv_heads", "kv_seq", "head_dim")
+    o = attention(q, ck, cv, causal=True, window=window, kv_len=kv_len,
+                  use_pallas=False,  # traced kv_len => jnp path
+                  unroll=attn_block_unroll(cfg, max(1, ck.shape[2] // 1024)))
+    x = x + attn_out(p["attn"], o, ctx)
+    h = rms_norm(x, p["ln_mlp"])
+    x = x + mlp(p["mlp"], h, ctx)
+    return constrain(ctx, x, "batch", "seq", "embed"), ck, cv
+
+
+def _scan_decode(cfg, params, cache, x, positions, index, kv_len, ctx):
+    windows = layer_windows(cfg)
+
+    def step(carry, xs):
+        p, ck, cv, w = xs
+        y, ck, cv = _decode_layer(cfg, p, ck, cv, carry, positions, index,
+                                  kv_len, w, ctx)
+        return y, (ck, cv)
+
+    x, (new_k, new_v) = lax.scan(
+        step, x, (params["layers"], cache["k"], cache["v"], windows),
+        unroll=layer_unroll(cfg))
+    return x, new_k, new_v
+
+
+def prefill(cfg, params: Params, tokens: jax.Array,
+            ctx: Optional[ShardCtx] = None,
+            inputs_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Params]:
+    """Forward that materializes the KV cache; returns (last-pos logits,
+    cache). Cache max_len == prompt len (decode grows a fresh cache in
+    real serving; the dry-run shapes pin max_len = seq_len)."""
+    x = embed(params["embed"], tokens, ctx)
+    if inputs_embeds is not None:
+        x = jnp.concatenate([inputs_embeds.astype(x.dtype), x], axis=1)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    x = constrain(ctx, x, "batch", "seq_sp", "embed")
+    cache = {
+        "k": jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, s, cfg.d_head),
+                       jnp.bfloat16),
+        "v": jnp.zeros((cfg.n_layers, b, cfg.n_kv_heads, s, cfg.d_head),
+                       jnp.bfloat16),
+        "index": jnp.zeros((), jnp.int32),
+    }
+    x, new_k, new_v = _scan_decode(cfg, params, cache, x, positions,
+                                   jnp.zeros((), jnp.int32), s, ctx)
+    x = rms_norm(x[:, -1:], params["ln_f"])
+    logits = unembed(params["embed"], x, ctx)
+    return logits, {"k": new_k, "v": new_v,
+                    "index": jnp.full((), s, jnp.int32)}
+
+
+def decode_step(cfg, params: Params, cache: Params, tokens: jax.Array,
+                ctx: Optional[ShardCtx] = None
+                ) -> Tuple[jax.Array, Params]:
+    """tokens [B,1] + cache -> (logits [B,1,V], updated cache)."""
+    index = cache["index"]
+    positions = jnp.full(tokens.shape, index, jnp.int32)
+    x = embed(params["embed"], tokens, ctx)
+    x, new_k, new_v = _scan_decode(cfg, params, cache, x, positions, index,
+                                   index + tokens.shape[1], ctx)
+    x = rms_norm(x, params["ln_f"])
+    logits = unembed(params["embed"], x, ctx)
+    return logits, {"k": new_k, "v": new_v, "index": index + tokens.shape[1]}

@@ -1,0 +1,67 @@
+"""InternVL2-style VLM: stub ViT frontend + dense LM backbone.
+
+Per the assignment the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings [B, n_prepend, VIT_DIM] (what
+InternViT would emit after pixel shuffle). This module owns only the
+MLP projector and delegates everything else to the dense transformer
+(internlm2-family backbone). Sequence budget: n_prepend patch positions +
+(seq_len - n_prepend) text tokens = exactly seq_len positions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ParamSpec
+from .layers import Params, ShardCtx, constrain, layer_norm
+from . import transformer as tf
+
+VIT_DIM = 1024
+
+
+def param_specs(cfg) -> Params:
+    base = tf.param_specs(cfg)
+    base["projector"] = {
+        "ln_w": ParamSpec((VIT_DIM,), (None,), jnp.float32, "ones"),
+        "ln_b": ParamSpec((VIT_DIM,), (None,), jnp.float32, "zeros"),
+        "w1": ParamSpec((VIT_DIM, cfg.d_model), (None, "embed"),
+                        init="scaled"),
+        "b1": ParamSpec((cfg.d_model,), ("embed",), jnp.float32, "zeros"),
+    }
+    return base
+
+
+def project_patches(p: Params, patches: jax.Array,
+                    ctx: Optional[ShardCtx]) -> jax.Array:
+    """[B, n_prepend, VIT_DIM] -> [B, n_prepend, d_model]."""
+    h = layer_norm(patches.astype(jnp.float32), p["ln_w"], p["ln_b"])
+    out = jnp.einsum("bsv,vd->bsd", h, p["w1"].astype(jnp.float32))
+    out = (out + p["b1"][None, None]).astype(jnp.bfloat16)
+    return constrain(ctx, out, "batch", "seq", "embed")
+
+
+def apply(cfg, params: Params, tokens: jax.Array,
+          patches: Optional[jax.Array] = None,
+          ctx: Optional[ShardCtx] = None) -> jax.Array:
+    """tokens [B, S - n_prepend]; patches [B, n_prepend, VIT_DIM].
+    Returns logits over ALL positions (caller masks the patch span)."""
+    if patches is None:
+        raise ValueError("vlm apply() needs `patches`")
+    emb = project_patches(params["projector"], patches, ctx)
+    return tf.apply(cfg, params, tokens, ctx, inputs_embeds=emb)
+
+
+cache_specs = tf.cache_specs
+
+
+def prefill(cfg, params, tokens, patches=None, ctx=None):
+    if patches is None:
+        raise ValueError("vlm prefill() needs `patches`")
+    emb = project_patches(params["projector"], patches, ctx)
+    return tf.prefill(cfg, params, tokens, ctx, inputs_embeds=emb)
+
+
+def decode_step(cfg, params, cache, tokens, ctx=None):
+    return tf.decode_step(cfg, params, cache, tokens, ctx)

@@ -1,0 +1,292 @@
+"""Zamba2 hybrid: Mamba2 (SSD) backbone + a weight-shared attention block.
+
+54 Mamba2 layers in 9 groups of 6; ONE shared transformer block (attn+MLP,
+its own parameters reused at every invocation) runs at the start of each
+group on ``concat(hidden, original_embedding)`` projected back to d_model
+(the Zamba2 "shared block + concat skip" scheme; per-invocation LoRAs are
+omitted — see DESIGN.md §changed-assumptions).
+
+Scan structure: outer scan over the 9 groups (shared-block params are
+*closed over*, so they stay un-stacked), inner scan over the 6 Mamba2
+layers with stacked params [9, 6, ...]. Decode state: per mamba layer a
+(conv buffer [B,K-1,C], SSD state [B,H,N,P]); per group invocation its own
+KV cache for the shared block.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import ParamSpec
+from repro.kernels.mamba2 import mamba2_ssd
+from .layers import (Params, ShardCtx, attention, attn_block_unroll,
+                     attn_out, attn_qkv, attn_specs, cache_update, constrain,
+                     embed, embed_specs, layer_unroll, mlp, mlp_specs,
+                     norm_specs, rms_norm, stack_specs, unembed)
+
+CONV_K = 4
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _mamba_specs(cfg) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    h = di // hd
+    conv_ch = di + 2 * n
+    return {
+        "ln": norm_specs(d),
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + h),
+                             ("embed", "ssm_inner"), init="scaled"),
+        "conv_w": ParamSpec((CONV_K, conv_ch), (None, "ssm_inner"),
+                            jnp.float32, "normal", 0.2),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), jnp.float32,
+                            "zeros"),
+        "a_log": ParamSpec((h,), ("heads",), jnp.float32, "zeros"),
+        "dt_bias": ParamSpec((h,), ("heads",), jnp.float32, "zeros"),
+        "d_skip": ParamSpec((h,), ("heads",), jnp.float32, "zeros"),
+        "norm_w": ParamSpec((di,), ("ssm_inner",), jnp.float32, "zeros"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"),
+                              init="scaled"),
+    }
+
+
+def _shared_block_specs(cfg) -> Params:
+    d = cfg.d_model
+    return {
+        "in_proj": ParamSpec((2 * d, d), ("embed_cat", "embed"),
+                             init="scaled"),
+        "ln_attn": norm_specs(d),
+        "attn": attn_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.d_head),
+        "ln_mlp": norm_specs(d),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+        "out_proj": ParamSpec((d, d), ("embed", "embed_out"), init="scaled"),
+    }
+
+
+def n_groups(cfg) -> int:
+    assert cfg.n_layers % cfg.shared_attn_every == 0, \
+        (cfg.n_layers, cfg.shared_attn_every)
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def param_specs(cfg) -> Params:
+    per_group = stack_specs(_mamba_specs(cfg), cfg.shared_attn_every)
+    return {
+        "embed": embed_specs(cfg.vocab_padded, cfg.d_model, tied=True),
+        "shared": _shared_block_specs(cfg),
+        "groups": stack_specs(per_group, n_groups(cfg)),
+        "ln_f": norm_specs(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x [B,S,C]; w [K,C]; conv_state [B,K-1,C]
+    (trailing inputs of the previous call) or None (zeros). Returns
+    (y [B,S,C], new_state [B,K-1,C])."""
+    bsz, s, ch = x.shape
+    k = w.shape[0]
+    prev = (jnp.zeros((bsz, k - 1, ch), x.dtype) if conv_state is None
+            else conv_state.astype(x.dtype))
+    xp = jnp.concatenate([prev, x], axis=1)           # [B, S+K-1, C]
+    y = sum(xp[:, i:i + s] * w[i][None, None].astype(x.dtype)
+            for i in range(k))
+    y = y + b[None, None].astype(x.dtype)
+    return y, xp[:, -(k - 1):]
+
+
+def mamba_block(cfg, p: Params, x: jax.Array, state, ctx) \
+        -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """state = (conv [B,K-1,C], ssd [B,H,N,P]) or (None, None)."""
+    bsz, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    h = di // hd
+    conv_in, ssd_in = state
+
+    hin = rms_norm(x, p["ln"])
+    zxbcdt = jnp.einsum("bsd,de->bse", hin, p["in_proj"])
+    zxbcdt = constrain(ctx, zxbcdt, "batch", "seq", "ssm_inner")
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc, conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_in)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])          # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [H]
+    xh = xs.reshape(bsz, s, h, hd).transpose(0, 2, 1, 3)      # [B,H,S,P]
+    xh = constrain(ctx, xh, "batch", "heads", "seq", "state")
+    y, ssd_out = mamba2_ssd(xh, dt.transpose(0, 2, 1), a, bmat, cmat,
+                            state=ssd_in, use_pallas=cfg.use_pallas)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None, None] * xh
+    y = y.transpose(0, 2, 1, 3).reshape(bsz, s, di)
+    y = rms_norm(y, p["norm_w"]) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"]).astype(x.dtype)
+    return (x + constrain(ctx, out, "batch", "seq", "embed"),
+            (conv_out, ssd_out))
+
+
+# ---------------------------------------------------------------------------
+# shared attention block
+# ---------------------------------------------------------------------------
+
+def shared_block(cfg, p: Params, x: jax.Array, x0: jax.Array,
+                 positions: jax.Array, kv, index, kv_len, ctx):
+    """kv = (ck, cv) one invocation's cache slice (or None for train)."""
+    cat = jnp.concatenate([x, x0], axis=-1)
+    hin = jnp.einsum("bsc,cd->bsd", cat, p["in_proj"])
+    hin = rms_norm(hin, p["ln_attn"])
+    q, k, v = attn_qkv(p["attn"], hin, positions,
+                       rope_theta=cfg.rope_theta, ctx=ctx)
+    if kv is None:
+        o = attention(q, k, v, causal=True,
+                      use_pallas=cfg.use_pallas or False)
+        new_kv = None
+    else:
+        ck, cv = cache_update(kv[0], kv[1], k, v, index)
+        ck = constrain(ctx, ck, "batch", "kv_heads", "kv_seq", "head_dim")
+        cv = constrain(ctx, cv, "batch", "kv_heads", "kv_seq", "head_dim")
+        o = attention(q, ck, cv, causal=True, kv_len=kv_len,
+                      unroll=attn_block_unroll(cfg,
+                                               max(1, ck.shape[2] // 1024)),
+                      use_pallas=False)
+        new_kv = (ck, cv)
+    hin = hin + attn_out(p["attn"], o, ctx)
+    hin = hin + mlp(p["mlp"], rms_norm(hin, p["ln_mlp"]), ctx)
+    out = jnp.einsum("bsd,de->bse", hin, p["out_proj"])
+    return x + constrain(ctx, out, "batch", "seq", "embed"), new_kv
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def apply(cfg, params: Params, tokens: jax.Array,
+          ctx: Optional[ShardCtx] = None) -> jax.Array:
+    x = embed(params["embed"], tokens, ctx)
+    x0 = x
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x = constrain(ctx, x, "batch", "seq_sp", "embed")
+
+    def group_step(carry, gp):
+        x, _ = shared_block(cfg, params["shared"], carry, x0, positions,
+                            None, None, None, ctx)
+
+        def mamba_step(c, p):
+            y, _ = mamba_block(cfg, p, c, (None, None), ctx)
+            return y, None
+
+        x, _ = lax.scan(_remat(cfg, mamba_step), x, gp,
+                        unroll=layer_unroll(cfg))
+        return x, None
+
+    x, _ = lax.scan(group_step, x, params["groups"],
+                    unroll=layer_unroll(cfg))
+    x = rms_norm(x, params["ln_f"])
+    return unembed(params["embed"], x, ctx)
+
+
+def cache_specs(cfg, batch: int, max_len: int) -> Params:
+    g = n_groups(cfg)
+    e = cfg.shared_attn_every
+    di, nst = cfg.d_inner, cfg.ssm_state
+    h = di // cfg.ssm_head_dim
+    conv_ch = di + 2 * nst
+    return {
+        "conv": ParamSpec((g, e, batch, CONV_K - 1, conv_ch),
+                          ("groups", "layers", "batch", None, "ssm_inner"),
+                          jnp.bfloat16, "zeros"),
+        "ssd": ParamSpec((g, e, batch, h, nst, cfg.ssm_head_dim),
+                         ("groups", "layers", "batch", "heads", "state",
+                          "state"), jnp.float32, "zeros"),
+        "k": ParamSpec((g, batch, cfg.n_kv_heads, max_len, cfg.d_head),
+                       ("groups", "batch", "kv_heads", "kv_seq",
+                        "head_dim"), jnp.bfloat16, "zeros"),
+        "v": ParamSpec((g, batch, cfg.n_kv_heads, max_len, cfg.d_head),
+                       ("groups", "batch", "kv_heads", "kv_seq",
+                        "head_dim"), jnp.bfloat16, "zeros"),
+        "x0": ParamSpec((batch, 1, cfg.d_model), ("batch", None, "embed"),
+                        jnp.bfloat16, "zeros"),
+        "index": ParamSpec((), (), jnp.int32, "zeros"),
+    }
+
+
+def _run_with_state(cfg, params, tokens, cache, ctx, x0_override=None):
+    x = embed(params["embed"], tokens, ctx)
+    # Zamba2's concat-skip uses the ORIGINAL embedding; for decode we use
+    # the current token's embedding (x0 of this step).
+    x0 = x if x0_override is None else x0_override
+    index = cache["index"]
+    s = tokens.shape[1]
+    positions = index + jnp.arange(s, dtype=jnp.int32)[None, :]
+    kv_len = index + s
+
+    def group_step(carry, xs):
+        x = carry
+        gp, conv, ssd, ck, cv = xs
+        x, new_kv = shared_block(cfg, params["shared"], x, x0, positions,
+                                 (ck, cv), index, kv_len, ctx)
+
+        def mamba_step(c, layer_xs):
+            p, cv_in, sd_in = layer_xs
+            y, (cv_out, sd_out) = mamba_block(cfg, p, c, (cv_in, sd_in), ctx)
+            return y, (cv_out.astype(cv_in.dtype), sd_out)
+
+        x, (conv2, ssd2) = lax.scan(mamba_step, x, (gp, conv, ssd),
+                                    unroll=layer_unroll(cfg))
+        return x, (conv2, ssd2, new_kv[0], new_kv[1])
+
+    x, (conv2, ssd2, nk, nv) = lax.scan(
+        group_step, x,
+        (params["groups"], cache["conv"], cache["ssd"], cache["k"],
+         cache["v"]), unroll=layer_unroll(cfg))
+    x = rms_norm(x, params["ln_f"])
+    logits = unembed(params["embed"], x[:, -1:], ctx)
+    return logits, {"conv": conv2, "ssd": ssd2, "k": nk, "v": nv,
+                    "x0": x0[:, -1:].astype(jnp.bfloat16),
+                    "index": index + s}
+
+
+def prefill(cfg, params, tokens, ctx=None):
+    b, s = tokens.shape
+    g = n_groups(cfg)
+    e = cfg.shared_attn_every
+    di, nst = cfg.d_inner, cfg.ssm_state
+    h = di // cfg.ssm_head_dim
+    zero = {
+        "conv": jnp.zeros((g, e, b, CONV_K - 1, di + 2 * nst), jnp.bfloat16),
+        "ssd": jnp.zeros((g, e, b, h, nst, cfg.ssm_head_dim), jnp.float32),
+        "k": jnp.zeros((g, b, cfg.n_kv_heads, s, cfg.d_head), jnp.bfloat16),
+        "v": jnp.zeros((g, b, cfg.n_kv_heads, s, cfg.d_head), jnp.bfloat16),
+        "x0": jnp.zeros((b, 1, cfg.d_model), jnp.bfloat16),
+        "index": jnp.zeros((), jnp.int32),
+    }
+    return _run_with_state(cfg, params, tokens, zero, ctx)
+
+
+def decode_step(cfg, params, cache, tokens, ctx=None):
+    return _run_with_state(cfg, params, tokens, cache, ctx)

@@ -1,0 +1,197 @@
+"""Masked fixed-shape relational operators on :class:`Table`.
+
+Every operator is jit-compatible: outputs have static capacities and a
+dynamic valid-row ``count``. Padding rows carry ``PAD_ID`` in every column so
+lexicographic sorts (``lax.sort`` with ``num_keys``) push them to the end.
+
+These are the building blocks the MapSDI transformation rules are defined
+over: projection (Rule 1/2), union+rename (Rule 3), distinct (duplicate
+elimination), and the sort-merge equi-join used by triple-map join
+conditions.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .encoding import PAD_ID
+from .table import Table
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _masked_data(table: Table) -> jax.Array:
+    """Table data with padding rows forced to PAD_ID in every column."""
+    return jnp.where(table.valid_mask[:, None], table.data,
+                     jnp.int32(PAD_ID))
+
+
+def compact(data: jax.Array, keep: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Scatter rows with ``keep`` set to the front; return (data, count)."""
+    keep = keep.astype(jnp.int32)
+    pos = jnp.cumsum(keep) - 1                      # destination row per kept row
+    capacity = data.shape[0]
+    dest = jnp.where(keep == 1, pos, capacity)      # out-of-range => dropped
+    out = jnp.full_like(data, jnp.int32(PAD_ID)).at[dest].set(
+        data, mode="drop")
+    return out, keep.sum().astype(jnp.int32)
+
+
+def sort_lex(table: Table) -> jax.Array:
+    """Rows sorted lexicographically by all columns; padding last."""
+    masked = _masked_data(table)
+    cols = tuple(masked[:, k] for k in range(table.n_attrs))
+    sorted_cols = lax.sort(cols, dimension=0, num_keys=table.n_attrs)
+    return jnp.stack(sorted_cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# unary operators
+# ---------------------------------------------------------------------------
+
+def project(table: Table, attrs: Sequence[str]) -> Table:
+    """π_attrs — keep only ``attrs`` (bag semantics: rows unchanged)."""
+    idx = [table.col_index(a) for a in attrs]
+    return Table(data=table.data[:, jnp.asarray(idx)], count=table.count,
+                 attrs=tuple(attrs))
+
+
+def project_as(table: Table, spec: Sequence[Tuple[str, str]]) -> Table:
+    """π with renaming: ``spec`` is ``[(source_attr, new_name), ...]``.
+
+    Unlike :func:`project`, a source attribute may appear several times
+    (needed when one attribute plays multiple roles after a Rule-3 merge).
+    """
+    names = [n for _, n in spec]
+    if len(set(names)) != len(names):
+        raise ValueError(f"project_as produces duplicate attrs: {names}")
+    idx = [table.col_index(a) for a, _ in spec]
+    return Table(data=table.data[:, jnp.asarray(idx)], count=table.count,
+                 attrs=tuple(names))
+
+
+def rename(table: Table, mapping: Mapping[str, str]) -> Table:
+    """ρ — rename attributes (data untouched)."""
+    new_attrs = tuple(mapping.get(a, a) for a in table.attrs)
+    if len(set(new_attrs)) != len(new_attrs):
+        raise ValueError(f"rename produces duplicate attrs: {new_attrs}")
+    return Table(data=table.data, count=table.count, attrs=new_attrs)
+
+
+def select_mask(table: Table, mask: jax.Array) -> Table:
+    """σ — keep rows where ``mask`` holds (and the row is valid)."""
+    keep = mask & table.valid_mask
+    data, count = compact(table.data, keep)
+    return Table(data=data, count=count, attrs=table.attrs)
+
+
+def select_eq(table: Table, attr: str, code: jax.Array | int) -> Table:
+    return select_mask(table, table.column(attr) == jnp.int32(code))
+
+
+def select_neq(table: Table, attr: str, code: jax.Array | int) -> Table:
+    return select_mask(table, table.column(attr) != jnp.int32(code))
+
+
+def distinct_rows(data: jax.Array, count: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Matrix-level δ: ``data[N, K]`` with ``count`` valid rows ->
+    deduplicated ``(data, count)``. Shared by Table ops and the shard_map
+    distributed dedup (which works on raw row matrices inside shards).
+
+    Lexicographic full-row sort, then first-occurrence compaction. This is
+    the TPU-native replacement for a hash table: one fused ``lax.sort`` over
+    all columns, a neighbour compare, and a cumsum scatter.
+    """
+    capacity, k = data.shape
+    valid_in = jnp.arange(capacity, dtype=jnp.int32) < count
+    masked = jnp.where(valid_in[:, None], data, jnp.int32(PAD_ID))
+    cols = tuple(masked[:, c] for c in range(k))
+    sorted_cols = lax.sort(cols, dimension=0, num_keys=k)
+    sorted_data = jnp.stack(sorted_cols, axis=1)
+    prev = jnp.roll(sorted_data, 1, axis=0)
+    first = jnp.any(sorted_data != prev, axis=1)
+    first = first.at[0].set(True)
+    valid = jnp.arange(capacity, dtype=jnp.int32) < count
+    return compact(sorted_data, first & valid)
+
+
+def distinct(table: Table) -> Table:
+    """δ — eliminate duplicate rows (set semantics)."""
+    data, count = distinct_rows(table.data, table.count)
+    return Table(data=data, count=count, attrs=table.attrs)
+
+
+# ---------------------------------------------------------------------------
+# binary operators
+# ---------------------------------------------------------------------------
+
+def union(a: Table, b: Table, dedup: bool = False) -> Table:
+    """∪ — concatenate rows (b's columns aligned to a's attr order).
+
+    With ``dedup=True`` this is set-union (π/∪/δ as in Transformation
+    Rule 3); otherwise bag-union.
+    """
+    if set(a.attrs) != set(b.attrs):
+        raise ValueError(f"union schema mismatch: {a.attrs} vs {b.attrs}")
+    b_aligned = project(b, a.attrs)
+    data = jnp.concatenate([_masked_data(a), _masked_data(b_aligned)], axis=0)
+    keep = jnp.concatenate([a.valid_mask, b_aligned.valid_mask])
+    data, count = compact(data, keep)
+    out = Table(data=data, count=count, attrs=a.attrs)
+    return distinct(out) if dedup else out
+
+
+def equi_join(left: Table, right: Table, left_key: str, right_key: str,
+              out_capacity: int, right_suffix: str = "r_",
+              ) -> Tuple[Table, jax.Array]:
+    """⋈ — sort-merge equi-join with a static output capacity.
+
+    Returns ``(table, total_matches)``; ``total_matches`` may exceed the
+    capacity (overflow detection is the caller's job — the MapSDI planner
+    sizes capacities from source cardinalities).
+
+    Output attrs: left attrs followed by right attrs, right-side names that
+    collide with a left name get ``right_suffix`` prepended. The join key is
+    kept on both sides (they are equal by construction).
+    """
+    lk = jnp.where(left.valid_mask, left.column(left_key), jnp.int32(PAD_ID))
+    rk = jnp.where(right.valid_mask, right.column(right_key),
+                   jnp.int32(PAD_ID))
+
+    cap_r = right.capacity
+    rk_sorted, perm = lax.sort(
+        (rk, jnp.arange(cap_r, dtype=jnp.int32)), dimension=0, num_keys=1)
+
+    lo = jnp.searchsorted(rk_sorted, lk, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(rk_sorted, lk, side="right").astype(jnp.int32)
+    counts = jnp.where(left.valid_mask & (lk != PAD_ID), hi - lo, 0)
+
+    offsets = jnp.cumsum(counts)                       # inclusive
+    starts = offsets - counts
+    total = offsets[left.capacity - 1] if left.capacity > 0 else jnp.int32(0)
+
+    j = jnp.arange(out_capacity, dtype=jnp.int32)
+    left_idx = jnp.searchsorted(offsets, j, side="right").astype(jnp.int32)
+    left_idx_c = jnp.clip(left_idx, 0, left.capacity - 1)
+    within = j - starts[left_idx_c]
+    right_pos = jnp.clip(lo[left_idx_c] + within, 0, cap_r - 1)
+    right_idx = perm[right_pos]
+    valid_out = j < jnp.minimum(total, out_capacity)
+
+    left_rows = left.data[left_idx_c]
+    right_rows = right.data[right_idx]
+    rows = jnp.concatenate([left_rows, right_rows], axis=1)
+    rows = jnp.where(valid_out[:, None], rows, jnp.int32(PAD_ID))
+
+    left_names = set(left.attrs)
+    right_attrs = tuple(
+        (right_suffix + a) if a in left_names else a for a in right.attrs)
+    out = Table(data=rows, count=jnp.minimum(total, out_capacity),
+                attrs=left.attrs + right_attrs)
+    return out, total.astype(jnp.int32)

@@ -1,0 +1,114 @@
+"""Fixed-capacity columnar tables on device.
+
+A ``Table`` is the SPMD-friendly stand-in for the paper's CSV sources: an
+int32 matrix ``data[capacity, n_attrs]`` of dictionary codes plus a dynamic
+``count`` of valid rows. Rows ``>= count`` are padding filled with ``PAD_ID``
+(INT32_MAX) so that lexicographic sorts push them to the end.
+
+Static metadata (attribute names, capacity) is pytree aux data, so tables
+flow through ``jax.jit``/``shard_map`` unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .encoding import PAD_ID, Vocab
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Table:
+    """Columnar relation: ``data[capacity, len(attrs)]`` int32 + valid count."""
+
+    data: jax.Array          # [capacity, n_attrs] int32
+    count: jax.Array         # scalar int32, number of valid rows
+    attrs: Tuple[str, ...]   # static: column names, in column order
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.count), self.attrs
+
+    @classmethod
+    def tree_unflatten(cls, attrs, children):
+        data, count = children
+        return cls(data=data, count=count, attrs=attrs)
+
+    # -- static properties ---------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def n_attrs(self) -> int:
+        return len(self.attrs)
+
+    def col_index(self, attr: str) -> int:
+        try:
+            return self.attrs.index(attr)
+        except ValueError:
+            raise KeyError(f"attribute {attr!r} not in table {self.attrs}")
+
+    def column(self, attr: str) -> jax.Array:
+        return self.data[:, self.col_index(attr)]
+
+    @property
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.count
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def empty(cls, attrs: Sequence[str], capacity: int) -> "Table":
+        data = jnp.full((capacity, len(attrs)), PAD_ID, dtype=jnp.int32)
+        return cls(data=data, count=jnp.int32(0), attrs=tuple(attrs))
+
+    @classmethod
+    def from_codes(cls, codes: np.ndarray, attrs: Sequence[str],
+                   capacity: int | None = None) -> "Table":
+        """Build from an [n, k] int32 code matrix (host)."""
+        codes = np.asarray(codes, dtype=np.int32)
+        n, k = codes.shape
+        if k != len(attrs):
+            raise ValueError("codes width != len(attrs)")
+        capacity = n if capacity is None else capacity
+        if n > capacity:
+            raise ValueError(f"{n} rows exceed capacity {capacity}")
+        data = np.full((capacity, k), PAD_ID, dtype=np.int32)
+        data[:n] = codes
+        return cls(data=jnp.asarray(data), count=jnp.int32(n),
+                   attrs=tuple(attrs))
+
+    @classmethod
+    def from_records(cls, records: Iterable[Mapping[str, object]],
+                     attrs: Sequence[str], vocab: Vocab,
+                     capacity: int | None = None) -> "Table":
+        """Intern host records (list of dicts) into a device table."""
+        rows: List[List[int]] = []
+        for rec in records:
+            rows.append([vocab.intern(rec[a]) for a in attrs])
+        codes = (np.asarray(rows, dtype=np.int32)
+                 if rows else np.zeros((0, len(attrs)), np.int32))
+        return cls.from_codes(codes, attrs, capacity)
+
+    # -- host-side views (tests / sinks only) ---------------------------------
+    def to_codes(self) -> np.ndarray:
+        n = int(self.count)
+        return np.asarray(self.data)[:n]
+
+    def to_records(self, vocab: Vocab) -> List[Dict[str, object]]:
+        return [
+            {a: vocab.decode(row[i]) for i, a in enumerate(self.attrs)}
+            for row in self.to_codes()
+        ]
+
+    def row_set(self) -> set:
+        """Set of valid rows as tuples — order-insensitive comparison."""
+        return {tuple(int(x) for x in row) for row in self.to_codes()}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Table(attrs={self.attrs}, capacity={self.capacity}, "
+                f"count={int(self.count) if not isinstance(self.count, jax.core.Tracer) else '?'})")

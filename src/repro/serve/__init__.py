@@ -1,0 +1,3 @@
+from .decode import make_prefill, make_serve_step, greedy_generate
+
+__all__ = ["make_prefill", "make_serve_step", "greedy_generate"]

@@ -1,0 +1,69 @@
+"""Serving entry points: prefill + single-token serve_step per family.
+
+``serve_step`` is the function the ``decode_32k`` / ``long_500k`` dry-run
+cells lower: one new token against a seq_len-deep cache/state. The cache
+layout (KV ring buffers for attention families, recurrent states for
+ssm/rwkv/hybrid) is owned by the family module (``cache_specs``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.models.layers import ShardCtx
+
+
+def make_prefill(cfg, ctx: Optional[ShardCtx] = None) -> Callable:
+    """(params, batch) -> (last-position logits, cache). Batch: tokens
+    [B, S] (+ patches / frames for vlm / encdec)."""
+    model = get_model(cfg.family)
+
+    def prefill(params, batch):
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["patches"] = batch["patches"]
+        if cfg.family == "encdec":
+            kwargs["frames"] = batch["frames"]
+        return model.prefill(cfg, params, batch["tokens"], ctx=ctx, **kwargs)
+
+    return prefill
+
+
+def make_serve_step(cfg, ctx: Optional[ShardCtx] = None) -> Callable:
+    """(params, cache, tokens [B,1]) -> (logits [B,1,V], cache)."""
+    model = get_model(cfg.family)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(cfg, params, cache, tokens, ctx=ctx)
+
+    return serve_step
+
+
+def greedy_generate(cfg, params, batch: Dict[str, jax.Array], n_new: int,
+                    ctx: Optional[ShardCtx] = None) -> jax.Array:
+    """Prefill + n_new greedy steps (examples / integration tests).
+
+    Note: uses the family's prefill cache, whose max_len equals the prompt
+    length for attention families — generation past it relies on the
+    jnp-path kv_len masking, so we grow by concatenating fresh columns on
+    the host side here (tiny model sizes only)."""
+    model = get_model(cfg.family)
+    prefill = make_prefill(cfg, ctx)
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    # pad attention caches so decode has room for n_new more positions
+    if "k" in cache and cache["k"].ndim >= 4:
+        pad = [(0, 0)] * cache["k"].ndim
+        pad[-2] = (0, n_new)
+        cache = dict(cache, k=jnp.pad(cache["k"], pad),
+                     v=jnp.pad(cache["v"], pad))
+    step = make_serve_step(cfg, ctx)
+    for _ in range(n_new - 1):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

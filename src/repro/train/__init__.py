@@ -1,0 +1,5 @@
+from .optimizer import Optimizer, adamw, adafactor, make_optimizer
+from .train_step import make_train_step, make_loss_fn
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer",
+           "make_train_step", "make_loss_fn"]

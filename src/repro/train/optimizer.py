@@ -1,0 +1,157 @@
+"""Optimizers as (init, update) pairs over parameter pytrees.
+
+* ``adamw`` — fp32 first/second moments + fp32 master weights (the
+  standard mixed-precision recipe; 16 bytes/param of state).
+* ``adafactor`` — factored second moment for >=2D tensors (row+col
+  accumulators), no momentum, no master copy: O(rows+cols) state. This is
+  what lets the 123B/1T configs fit the per-chip HBM budget.
+
+State lives in the same sharding as the parameters (tree-structure
+preserved), so pjit shards it without extra annotation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """update(grads, state, params, step) -> (params, state, grad_norm)."""
+
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any, jax.Array]]
+    name: str = "opt"
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                 grads), norm
+
+
+def _wd_mask(path) -> bool:
+    """No weight decay on norms / biases / 1-D params."""
+    name = "/".join(str(k) for k in path)
+    return not any(s in name for s in ("ln", "norm", "bias", "_b"))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        return {
+            "mu": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "nu": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "master": _tmap(lambda p: jnp.array(p, dtype=jnp.float32,
+                                    copy=True), params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                   state["mu"], grads)
+        nu = _tmap(lambda v, g: b2 * v
+                   + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                   state["nu"], grads)
+
+        def stepf(path, w, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay and _wd_mask(path):
+                upd = upd + weight_decay * w
+            return w - lr * upd
+
+        master = jax.tree_util.tree_map_with_path(
+            stepf, state["master"], mu, nu)
+        new_params = _tmap(lambda w, p: w.astype(p.dtype), master, params)
+        return new_params, {"mu": mu, "nu": nu, "master": master}, gnorm
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum, no master)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_norm: float = 1.0, weight_decay: float = 0.0
+              ) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def per(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": _tmap(per, params,
+                           is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def per(path, w, g, v):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if _factored(g.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None],
+                                       eps))
+                upd = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                upd = gf * jax.lax.rsqrt(jnp.maximum(nv["v"], eps))
+            # relative-scale update clipping (Adafactor d=1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)))
+            upd = upd / jnp.maximum(1.0, rms)
+            wf = w.astype(jnp.float32)
+            if weight_decay and _wd_mask(path):
+                upd = upd + weight_decay * wf
+            return (wf - lr * upd).astype(w.dtype), nv
+
+        flat = jax.tree_util.tree_map_with_path(
+            per, params, grads, state["v"],
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+        new_params = _tmap(lambda pair: pair[0], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_v = _tmap(lambda pair: pair[1], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"v": new_v}, gnorm
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, lr: float = 3e-4) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    raise KeyError(f"unknown optimizer {name!r}")

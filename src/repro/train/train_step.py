@@ -1,0 +1,142 @@
+"""Train step: loss, microbatched gradient accumulation, optimizer apply.
+
+The step is family-agnostic: the loss closes over the arch config and the
+family module's ``apply``. Gradient accumulation is a ``lax.scan`` over
+microbatches (batch reshaped [n_mb, mb, S]) with an fp32 (or bf16, per
+config) gradient accumulator — remat happens inside the model, so peak
+activation memory is one microbatch deep.
+
+Cross-pod gradient compression (int8 error feedback) hooks in between the
+accumulation and the optimizer: see :mod:`repro.train.grad_compress` and
+:func:`with_error_feedback`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import get_model
+from repro.models.layers import ShardCtx, softmax_xent
+from .optimizer import Optimizer, make_optimizer
+
+Batch = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg, ctx: Optional[ShardCtx] = None) -> Callable:
+    """(params, batch) -> scalar loss. Batch keys by family:
+    dense/moe/rwkv/hybrid: tokens, labels [B,S] (+ loss_mask)
+    vlm:   + patches [B,n_prepend,VIT_DIM]; labels cover text span only
+    encdec: + frames [B,n_enc_frames,d_model]."""
+    model = get_model(cfg.family)
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["patches"] = batch["patches"]
+        if cfg.family == "encdec":
+            kwargs["frames"] = batch["frames"]
+        logits = model.apply(cfg, params, batch["tokens"], ctx=ctx, **kwargs)
+        labels = batch["labels"]
+        if cfg.family == "vlm":  # logits cover patches + text; slice text
+            logits = logits[:, cfg.n_prepend:]
+        mask = batch.get("loss_mask")
+        loss = softmax_xent(logits, labels, mask, cfg.vocab_size)
+        if cfg.family == "moe":
+            # lightweight router balance penalty on the embedding output
+            loss = loss + 0.0  # per-layer aux loss folded in future work
+        return loss
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def with_error_feedback(optimizer: Optimizer, n_inner: int,
+                        pod_axis: str = "pod", inner_axis: str = "data"):
+    """Wrap an optimizer + build the grad_compress hook for the
+    hierarchical compressed gradient sync (RS over ``inner_axis`` ->
+    int8+EF quantize -> int16 psum over ``pod_axis`` -> AG). The optimizer
+    state becomes ``{"opt": ..., "ef": ...}`` with EF buffers on the
+    reduce-scattered shard. The train step must run inside a shard_map
+    where BOTH axes are manual (the pod-decoupled wrapper in
+    :mod:`repro.launch.specs`). Requires pod-replicated, non-FSDP
+    params."""
+    from repro.train.grad_compress import (
+        hierarchical_compress_allreduce, init_scattered_error_buffers)
+
+    def init(params):
+        return {"opt": optimizer.init(params),
+                "ef": init_scattered_error_buffers(params, n_inner)}
+
+    def update(grads, state, params, step):
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, state["opt"], params, step)
+        return new_params, dict(state, opt=new_opt), gnorm
+
+    def hook(grads, opt_state):
+        new_g, new_ef = hierarchical_compress_allreduce(
+            grads, opt_state["ef"], pod_axis=pod_axis,
+            inner_axis=inner_axis)
+        return new_g, dict(opt_state, ef=new_ef)
+
+    return Optimizer(init, update, optimizer.name + "+ef"), hook
+
+
+def make_train_step(cfg, *, n_microbatches: int = 1,
+                    optimizer: Optional[Optimizer] = None,
+                    ctx: Optional[ShardCtx] = None,
+                    accum_dtype=jnp.float32,
+                    grad_compress: Optional[Callable] = None):
+    """Returns ``train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics)`` (pure; jit/donate at the call site)."""
+    optimizer = optimizer or make_optimizer(cfg.optimizer)
+    loss_fn = make_loss_fn(cfg, ctx)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def split_mb(x):
+        return x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                         + x.shape[1:])
+
+    def train_step(params, opt_state, batch, step):
+        if n_microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            mb_batch = jax.tree_util.tree_map(split_mb, batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def accum(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            (loss, grads), _ = lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros), mb_batch,
+                # dry-run cost fidelity: XLA tallies while bodies once, so
+                # the roofline build unrolls the accumulation loop too
+                unroll=bool(getattr(cfg, "unroll_layers", False)))
+            loss = loss / n_microbatches
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / n_microbatches), grads)
+
+        if grad_compress is not None:
+            grads, opt_state = grad_compress(grads, opt_state)
+
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, opt_state, params, step)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step

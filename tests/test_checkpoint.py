@@ -1,0 +1,168 @@
+"""Checkpointing + fault-tolerance behaviour tests."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.checkpoint import (CheckpointManager, all_steps,
+                                          latest_step, restore_checkpoint,
+                                          save_checkpoint)
+from repro.distributed.fault import (FailureInjector, RestartPolicy,
+                                     SimulatedFailure, StragglerMonitor,
+                                     run_with_restarts)
+
+
+def _tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "layers": {"w": jnp.asarray(r.normal(0, 1, (4, 8, 8)), jnp.bfloat16),
+                   "b": jnp.asarray(r.normal(0, 1, (4, 8)), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def _assert_tree_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 12, t, extra={"note": "hi"})
+    assert latest_step(str(tmp_path)) == 12
+    got, extra = restore_checkpoint(str(tmp_path), t)
+    _assert_tree_equal(t, got)
+    assert extra["note"] == "hi"
+
+
+def test_atomicity_no_partial_visible(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    # a stale tmp dir from a crashed writer must not be visible
+    os.makedirs(str(tmp_path / "step_00000002.tmp"))
+    assert latest_step(str(tmp_path)) == 1
+    assert all_steps(str(tmp_path)) == [1]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    bad = dict(t, step=jnp.zeros((2,), jnp.int32))
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_manager_retention_and_async(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_n=2, async_write=True)
+    for s in range(5):
+        m.save(s, _tree(s))
+    m.wait()
+    assert m.all_steps() == [3, 4]
+    got, _ = m.restore(_tree())
+    _assert_tree_equal(_tree(4), got)
+    m.close()
+
+
+def test_manager_sync_mode(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_n=0, async_write=False)
+    m.save(0, _tree(0))
+    m.save(1, _tree(1))
+    assert m.all_steps() == [0, 1]      # keep_n=0 => keep everything
+    m.close()
+
+
+def test_elastic_restore_new_sharding(tmp_path):
+    """Restore with explicit shardings (single-device 'mesh' here; the
+    multi-device elastic path is exercised in test_distributed-style
+    subprocesses by examples/elastic_restart.py)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    t = _tree()
+    save_checkpoint(str(tmp_path), 0, t)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), t)
+    got, _ = restore_checkpoint(str(tmp_path), t, shardings=sh)
+    _assert_tree_equal(t, got)
+    leaf = jax.tree_util.tree_leaves(got)[0]
+    assert leaf.sharding == NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# failure injection / restart supervisor
+# ---------------------------------------------------------------------------
+
+def test_injector_schedule_fires_once():
+    inj = FailureInjector(schedule=(3,))
+    inj.maybe_fail(2)
+    with pytest.raises(SimulatedFailure):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)        # second pass survives (post-restart replay)
+
+
+def test_injector_probabilistic_deterministic():
+    a = FailureInjector(p=0.3, seed=42, max_failures=100)
+    b = FailureInjector(p=0.3, seed=42, max_failures=100)
+    fails_a, fails_b = [], []
+    for inj, out in ((a, fails_a), (b, fails_b)):
+        for s in range(50):
+            try:
+                inj.maybe_fail(s)
+            except SimulatedFailure:
+                out.append(s)
+    assert fails_a == fails_b and fails_a
+
+
+def test_run_with_restarts_resumes():
+    state = {"completed": [], "attempts": 0}
+    inj = FailureInjector(schedule=(2, 5))
+
+    def loop(resume):
+        state["attempts"] += 1
+        start = len(state["completed"])     # "restore from checkpoint"
+        for step in range(start, 8):
+            inj.maybe_fail(step)
+            state["completed"].append(step)
+        return state["completed"]
+
+    result, report = run_with_restarts(loop, RestartPolicy(max_restarts=3))
+    assert result == list(range(8))
+    assert report.restarts == 2
+    assert state["attempts"] == 3
+
+
+def test_run_with_restarts_gives_up():
+    def loop(resume):
+        raise SimulatedFailure("always")
+
+    with pytest.raises(SimulatedFailure):
+        run_with_restarts(loop, RestartPolicy(max_restarts=2))
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_detection_and_weights():
+    mon = StragglerMonitor(n_hosts=4, alpha=1.0, threshold=1.5)
+    mon.observe([1.0, 1.0, 1.0, 3.0])
+    assert mon.stragglers() == [3]
+    w = mon.shard_weights()
+    assert w.sum() == pytest.approx(4.0)
+    assert w[3] < w[0]          # slow host gets less data
+
+
+def test_straggler_ema_recovers():
+    mon = StragglerMonitor(n_hosts=2, alpha=0.5, threshold=1.4)
+    mon.observe([1.0, 3.0])
+    assert mon.stragglers() == [1]
+    for _ in range(8):
+        mon.observe([1.0, 1.0])
+    assert mon.stragglers() == []

@@ -1,0 +1,139 @@
+"""MapSDI core tests: paper-figure reconstructions, Rules 1-3, fixpoint."""
+import numpy as np
+import pytest
+
+from repro.core import (apply_mapsdi, apply_merge, apply_projection,
+                        mapsdi_create_kg, merge_groups, parse_dis, rdfize,
+                        referenced_attrs, t_framework_create_kg,
+                        triples_to_ntriples)
+from repro.core.rdfizer import RDFizer
+from repro.data import fig4_gene_source, fig5_join_dis, make_group_a_dis, \
+    make_group_b_dis
+from repro.data.synthetic import FIG3_MAP
+
+
+def _fig3_dis():
+    records, attrs = fig4_gene_source()
+    return parse_dis({"sources": {"genes": {"attrs": attrs,
+                                            "records": records}},
+                      "maps": [FIG3_MAP]})
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3/4: Rule 1 — projection of attributes
+# ---------------------------------------------------------------------------
+
+def test_fig3_raw_triples_and_kg():
+    dis = _fig3_dis()
+    kg, raw = rdfize(dis, engine="rmlmapper")
+    # 9 rows x (3 poms + 1 class triple) = 36 raw triples
+    assert raw == 36
+    # 3 distinct genes x 4 triples = 12 distinct triples
+    assert int(kg.count) == 12
+
+
+def test_fig4_rule1_projection_shrinks_source_same_kg():
+    dis = _fig3_dis()
+    kg_t, _ = rdfize(dis, engine="rmlmapper")
+    dis2 = apply_projection(dis)
+    # the projected source has 3 rows (Fig. 4b) under the 4 used attrs
+    (src,) = dis2.sources.values()
+    assert set(src.attrs) == {"ENSG", "SYMBOL", "SPECIES", "ACC"}
+    assert int(src.count) == 3
+    kg_m, raw_m = rdfize(dis2, engine="rmlmapper")
+    assert raw_m == 12  # no duplicated RDF triples generated at all
+    assert kg_m.row_set() == kg_t.row_set()
+
+
+def test_fig3_ntriples_decode():
+    dis = _fig3_dis()
+    kg, _ = rdfize(dis)
+    lines = triples_to_ntriples(kg, dis)
+    assert len(lines) == 12
+    assert any("project-iasis.eu/Gene/ENSG00000187583" in l for l in lines)
+    assert any('"PLEKHN1"' in l for l in lines)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5/6/7: Rule 2 — pushing projections into joins
+# ---------------------------------------------------------------------------
+
+def test_fig5_join_duplicates_22_to_3():
+    dis = fig5_join_dis()
+    rdfizer = RDFizer(dis, engine="rmlmapper")
+    kg_t, raw_t = rdfizer()
+    # TripleMap1's join: 5*3 + 3*2 + 1*1 = 22 matches (paper's number),
+    # plus TripleMap2's 8 blind class triples
+    assert int(raw_t) == 22 + 8
+    dis2 = apply_mapsdi(dis)[0]
+    kg_m, raw_m = RDFizer(dis2, engine="rmlmapper")()
+    # after projection+dedup: one join match per (STAT5B, KRAS, GAS7) = 3;
+    # parent shrinks to 4 distinct (Genename, Chromosome) rows (Fig. 7b)
+    assert int(raw_m) == 3 + 4
+    assert kg_m.row_set() == kg_t.row_set()
+    # 2 distinct isRelatedTo triples (chr17, chr12) as in Fig. 7c
+    assert int(kg_t.count) == 2 + 3
+
+
+def test_rule2_keeps_incoming_join_attrs():
+    dis = fig5_join_dis()
+    needed = referenced_attrs(dis)
+    # TripleMap2 is a join parent: must keep its subject attr AND Genename
+    assert needed["TripleMap2"] == {"Chromosome", "Genename"}
+
+
+# ---------------------------------------------------------------------------
+# Rule 3 — merging sources with equivalent attributes
+# ---------------------------------------------------------------------------
+
+def test_group_a_merges_three_sources():
+    dis = make_group_a_dis(n_rows=64, redundancy=0.75, seed=1)
+    assert len(merge_groups(dis)) == 1
+    kg_t, _ = t_framework_create_kg(dis)
+    dis2, stats = apply_mapsdi(dis)
+    assert stats.rule3_merges == 1
+    assert len(dis2.maps) == 1          # three maps collapsed into one
+    assert len(dis2.sources) == 1       # one merged source
+    kg_m, _ = rdfize(dis2)
+    assert kg_m.row_set() == kg_t.row_set()
+
+
+def test_group_a_redundancy_reduction():
+    dis = make_group_a_dis(n_rows=200, redundancy=0.75, seed=2)
+    dis2, stats = apply_mapsdi(dis)
+    before = sum(stats.source_rows_before.values())
+    after = sum(stats.source_rows_after.values())
+    assert before == 600
+    assert after < before * 0.3  # 75% redundancy + merging
+
+
+def test_merge_skips_join_parents():
+    dis = fig5_join_dis()
+    assert merge_groups(dis) == []  # joins present, nothing merges
+
+
+# ---------------------------------------------------------------------------
+# fixpoint + end-to-end
+# ---------------------------------------------------------------------------
+
+def test_fixpoint_idempotent():
+    from repro.core.transform import _dis_signature
+    dis = make_group_a_dis(n_rows=32, redundancy=0.5, seed=3)
+    dis2, _ = apply_mapsdi(dis)
+    dis3, _ = apply_mapsdi(dis2)
+    assert _dis_signature(dis2) == _dis_signature(dis3)
+
+
+def test_end_to_end_pipeline_matches_baseline():
+    dis = make_group_b_dis(n_rows=120, redundancy=0.6, seed=4)
+    kg_t, stats_t = t_framework_create_kg(dis, engine="rmlmapper")
+    kg_m, stats_m = mapsdi_create_kg(dis, engine="sdm")
+    assert kg_m.row_set() == kg_t.row_set()
+    assert stats_m["raw_triples"] <= stats_t["raw_triples"]
+
+
+def test_sdm_engine_equals_rmlmapper_engine():
+    dis = make_group_b_dis(n_rows=80, redundancy=0.5, seed=5)
+    kg_a, _ = rdfize(dis, engine="rmlmapper")
+    kg_b, _ = rdfize(dis, engine="sdm")
+    assert kg_a.row_set() == kg_b.row_set()

@@ -1,0 +1,120 @@
+"""Unit tests for the HLO collective parser + roofline helpers."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (CollectiveStats, collective_bytes,
+                                       collective_bytes_scaled, _type_bytes)
+
+
+FAKE = """
+HloModule jit_step
+
+%fused (a: f32[128,256]) -> f32[128,256] {
+  ...
+}
+
+ENTRY %main (p0: f32[128,256], p1: bf16[64]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %p1 = bf16[64]{0} parameter(1)
+  %ar = f32[128,256]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = bf16[128]{0} all-gather(%p1), dimensions={0}
+  %a2a = f32[128,256]{1,0} all-to-all(%ar), dimensions={0}
+  %cp = bf16[64]{0} collective-permute(%p1), source_target_pairs={{0,1}}
+  ROOT %out = f32[128,256]{1,0} add(%ar, %a2a)
+}
+"""
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _type_bytes("bf16[64]") == 128
+    assert _type_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert _type_bytes("pred[]") == 1
+
+
+def test_collective_bytes_by_op():
+    st = collective_bytes(FAKE)
+    f32mat = 128 * 256 * 4
+    assert st.by_op["all-reduce"] == f32mat
+    assert st.by_op["all-gather"] == 64 * 2
+    assert st.by_op["all-to-all"] == f32mat
+    assert st.by_op["collective-permute"] == 64 * 2
+    assert st.by_op_count["all-reduce"] == 1
+    assert st.total_bytes == 2 * f32mat + 2 * 128
+
+
+def test_async_pairs_not_double_counted():
+    text = """
+ENTRY %e (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  %s = f32[16]{0} all-reduce-start(%p), to_apply=%add
+  ROOT %d = f32[16]{0} all-reduce-done(%s)
+}
+"""
+    st = collective_bytes(text)
+    assert st.by_op_count["all-reduce"] == 1
+    assert st.by_op["all-reduce"] == 64
+
+
+def test_real_compiled_psum_collectives():
+    """Compile a psum over 4 forced-host devices in a subprocess and check
+    the parser finds exactly one all-reduce of the right size."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.launch.hlo_analysis import collective_bytes
+
+mesh = make_mesh((4,), ("data",))
+sh = NamedSharding(mesh, P("data"))
+x = jax.ShapeDtypeStruct((1024, 64), jnp.float32, sharding=sh)
+
+def f(x):
+    return jax.lax.with_sharding_constraint(
+        jnp.broadcast_to(x.sum(axis=0, keepdims=True), x.shape),
+        NamedSharding(mesh, P("data")))
+
+txt = jax.jit(f).lower(x).compile().as_text()
+st = collective_bytes(txt)
+assert st.by_op_count["all-reduce"] >= 1, st.by_op_count
+# partial sum operand: [1, 64] f32 per device
+assert st.by_op["all-reduce"] >= 64 * 4, st.by_op
+print("OK", st.by_op)
+"""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+def test_depth_extrapolation_affine():
+    from repro.launch.roofline import extrapolate
+    f0 = {"flops": 10.0, "bytes": 100.0}
+    f1 = {"flops": 16.0, "bytes": 130.0}
+    f = extrapolate(f0, f1, 4, 8, 28)
+    assert f["flops"] == pytest.approx(10 + 1.5 * 24)
+    assert f["bytes"] == pytest.approx(100 + 7.5 * 24)
+
+
+def test_model_flops_conventions():
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch.roofline import model_flops
+    from repro.launch.specs import model_param_counts
+    cfg = get_config("qwen3_1p7b")
+    params = model_param_counts(cfg)
+    train = model_flops(cfg, SHAPES["train_4k"], 256, params)
+    decode = model_flops(cfg, SHAPES["decode_32k"], 256, params)
+    # train: 6*N*D / devices
+    want = 6 * params["body_active"] * 4096 * 256 / 256
+    assert train == pytest.approx(want)
+    assert decode < train / 1000
