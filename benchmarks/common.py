@@ -1,4 +1,9 @@
-"""Shared benchmark utilities: timing, CSV/JSON artifacts."""
+"""Shared benchmark utilities: timing, CSV/JSON artifacts.
+
+Used by every group in this package; artifacts are one JSON list of row
+dicts per group under ``experiments/bench/`` (the same rows are printed as
+CSV for eyeballing).
+"""
 from __future__ import annotations
 
 import json

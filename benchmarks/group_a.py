@@ -1,6 +1,10 @@
 """Experiment group A (paper Fig. 8): volume x redundancy grid.
 
-MapSDI vs T-framework on both engines. For every cell we assert the two
+Paper mapping: Fig. 8 plots KG-creation time for MapSDI vs the traditional
+framework over data volume (its 10k–100k-row testbed) × duplicate
+redundancy (25%/50%/75%), for both studied engines (RMLMapper-style blind
+generation and the duplicate-aware SDM-RDFizer) — the experiment behind
+the paper's order-of-magnitude claim. For every cell we assert the two
 frameworks produce the SAME knowledge graph (the paper's Q1) and record:
 
 * ``*_warm_s``   steady-state semantification time (jitted closure,

@@ -1,10 +1,12 @@
 """Roofline summary: collate the dry-run + roofline artifacts.
 
-Reads ``experiments/dryrun_scan`` (production compiles: memory proof) and
-``experiments/roofline`` (depth-extrapolated cost terms) and prints the
-per-(arch x shape) table used by EXPERIMENTS.md §Roofline. Run
-``python -m repro.launch.dryrun`` / ``python -m repro.launch.roofline``
-first to (re)generate the artifacts.
+Beyond-paper group (no figure counterpart): the scaled-up system's memory
+and cost model. Reads ``experiments/dryrun_scan`` (production compiles:
+memory proof) and ``experiments/roofline`` (depth-extrapolated cost terms)
+and prints the per-(arch x shape) table used by EXPERIMENTS.md §Roofline.
+Run ``python -m repro.launch.dryrun`` / ``python -m repro.launch.roofline``
+first to (re)generate the artifacts; with no artifacts present this prints
+a hint and exits cleanly.
 """
 from __future__ import annotations
 

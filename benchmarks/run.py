@@ -1,13 +1,16 @@
 """Benchmark entry point: one function per paper table/figure.
 
-``python -m benchmarks.run [--scale S]`` runs:
+``python -m benchmarks.run [--scale S] [--smoke]`` runs:
 
-  * group_a     — Fig. 8 volume x redundancy grid (2 engines)
-  * group_b     — Fig. 9 join scenarios
-  * table1      — Table 1 source-size reduction
-  * motivating  — Fig. 1 duplicate blow-up
+  * group_a     — paper Fig. 8: volume x redundancy grid (2 engines)
+  * group_b     — paper Fig. 9: join-condition scenarios
+  * table1      — paper Table 1: source-size reduction by pre-processing
+  * motivating  — paper Fig. 1: the duplicate blow-up
+  * dedup       — δ operator sweep: lex vs hash-first vs distributed
   * roofline    — collated §Roofline table (from dry-run artifacts)
 
+``--smoke`` exercises exactly one tiny cell per group (CI wiring: fast,
+asserts all correctness invariants, skips nothing structurally).
 Artifacts land in ``experiments/bench/*.json``.
 """
 from __future__ import annotations
@@ -23,18 +26,47 @@ def main(argv=None) -> int:
                          "(1.0 = the scaled-down paper testbed)")
     ap.add_argument("--only", default="",
                     help="comma list: group_a,group_b,table1,motivating,"
-                         "roofline")
+                         "dedup,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny cell per group (CI)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from . import group_a, group_b, motivating, roofline, table1
+    from . import dedup, group_a, group_b, motivating, roofline, table1
 
-    jobs = [("group_a", lambda: group_a.main(["--scale", str(args.scale)])),
+    if args.smoke:
+        from repro.configs.mapsdi_paper import CONFIG as PAPER
+
+        from .common import print_csv, save_rows
+
+        def _smoke(name, fn):
+            rows = fn()
+            save_rows(name, rows)
+            print_csv(rows)
+            return rows
+
+        jobs = [
+            ("group_a", lambda: _smoke("group_a", lambda: group_a.run(
+                scale=0.02, volumes=PAPER.volumes[:1],
+                redundancies=PAPER.redundancies[:1], engines=["sdm"]))),
+            ("group_b", lambda: _smoke("group_b", lambda: group_b.run(
+                scale=0.02, scenarios=PAPER.group_b_scenarios[:1]))),
+            ("table1", lambda: _smoke("table1", lambda: table1.run(
+                scale=0.02, volumes=PAPER.volumes[:1]))),
+            ("motivating", lambda: motivating.main(["--rows", "120"])),
+            ("dedup", lambda: dedup.main(["--smoke"])),
+            ("roofline", lambda: roofline.main([])),
+        ]
+    else:
+        jobs = [
+            ("group_a", lambda: group_a.main(["--scale", str(args.scale)])),
             ("group_b", lambda: group_b.main(["--scale", str(args.scale)])),
             ("table1", lambda: table1.main(["--scale", str(args.scale)])),
             ("motivating", lambda: motivating.main(
                 ["--rows", str(max(200, int(4000 * args.scale)))])),
-            ("roofline", lambda: roofline.main([]))]
+            ("dedup", lambda: dedup.main([])),
+            ("roofline", lambda: roofline.main([])),
+        ]
     for name, fn in jobs:
         if only and name not in only:
             continue

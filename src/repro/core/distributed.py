@@ -28,9 +28,10 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.kernels.rowhash import rowhash, rowhash_ref
 from repro.relalg import PAD_ID, Table
-from repro.relalg.ops import compact, distinct_rows
+from repro.relalg.ops import compact, dedup_rows
 
 
 # ---------------------------------------------------------------------------
@@ -103,13 +104,19 @@ def unpack_u16_pairs(packed: jax.Array, k: int) -> jax.Array:
 def _repartition_distinct_body(data: jax.Array, count: jax.Array, *,
                                axis: str, n_shards: int, cap_bucket: int,
                                use_pallas: Optional[bool],
-                               pack_u16: bool = False
+                               pack_u16: bool = False,
+                               dedup: Optional[str] = None
                                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Per-shard body: local δ -> hash partition -> all_to_all -> local δ."""
+    """Per-shard body: local δ -> hash partition -> all_to_all -> local δ.
+
+    Both local δ passes go through :func:`repro.relalg.ops.dedup_rows`, so
+    the single-device and distributed paths share one implementation and one
+    ``dedup`` strategy ("lex" | "hash" | None = engine default).
+    """
     count = count.reshape(())
     k_cols = data.shape[1]
     # 1. dedup BEFORE the collective (pushdown to the network)
-    data, count = distinct_rows(data, count)
+    data, count = dedup_rows(data, count, dedup, use_pallas=use_pallas)
     # 2. bucket by row hash
     buckets, bcounts, overflow = _partition_local(
         data, count, n_shards, cap_bucket, use_pallas)
@@ -135,7 +142,7 @@ def _repartition_distinct_body(data: jax.Array, count: jax.Array, *,
     valid = row_in_bucket < recv_counts[bucket_of_row]
     flat, n = compact(jnp.where(valid[:, None], flat, jnp.int32(PAD_ID)),
                       valid)
-    flat, n = distinct_rows(flat, n)
+    flat, n = dedup_rows(flat, n, dedup, use_pallas=use_pallas)
     return flat, n.reshape(1), overflow.reshape(1)
 
 
@@ -146,7 +153,8 @@ def _repartition_distinct_body(data: jax.Array, count: jax.Array, *,
 def make_repartition_distinct(mesh: Mesh, axis: str, cap_local: int, k: int,
                               slack: float = 1.0,
                               use_pallas: Optional[bool] = None,
-                              pack_u16: bool = False):
+                              pack_u16: bool = False,
+                              dedup: Optional[str] = None):
     """Build the jitted global-distinct over a row-sharded matrix.
 
     Input:  data [n_shards * cap_local, k] sharded P(axis, None),
@@ -170,8 +178,9 @@ def make_repartition_distinct(mesh: Mesh, axis: str, cap_local: int, k: int,
 
     body = functools.partial(_repartition_distinct_body, axis=axis,
                              n_shards=n_shards, cap_bucket=cap_bucket,
-                             use_pallas=use_pallas, pack_u16=pack_u16)
-    fn = jax.shard_map(body, mesh=mesh,
+                             use_pallas=use_pallas, pack_u16=pack_u16,
+                             dedup=dedup)
+    fn = shard_map(body, mesh=mesh,
                        in_specs=(P(axis, None), P(axis)),
                        out_specs=(P(axis, None), P(axis), P(axis)))
 
@@ -216,12 +225,14 @@ def unshard_rows(data: jax.Array, counts: jax.Array, cap_local: int
 def distributed_distinct_table(table: Table, mesh: Mesh, axis: str = "data",
                                slack: float = 1.0,
                                use_pallas: Optional[bool] = None,
-                               pack_u16: Optional[bool] = None
+                               pack_u16: Optional[bool] = None,
+                               dedup: Optional[str] = None
                                ) -> Tuple[Table, bool]:
     """Convenience end-to-end: shard -> global distinct -> gather.
 
     ``pack_u16=None`` auto-enables payload packing when every valid code
-    fits 16 bits (the host knows the dictionary)."""
+    fits 16 bits (the host knows the dictionary). ``dedup`` picks the
+    shard-local δ strategy (shared with the single-device path)."""
     if pack_u16 is None:
         rows_np = np.asarray(table.data)[:int(table.count)]
         pack_u16 = bool(rows_np.size == 0
@@ -229,7 +240,7 @@ def distributed_distinct_table(table: Table, mesh: Mesh, axis: str = "data",
     data, counts, cap_local = shard_table(table, mesh, axis)
     run, out_cap_local = make_repartition_distinct(
         mesh, axis, cap_local, table.n_attrs, slack, use_pallas,
-        pack_u16=pack_u16)
+        pack_u16=pack_u16, dedup=dedup)
     out, n, overflow = run(data, counts)
     rows = unshard_rows(out, n, out_cap_local)
     return (Table.from_codes(rows, table.attrs),

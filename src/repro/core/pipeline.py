@@ -19,12 +19,17 @@ from .transform import TransformStats, apply_mapsdi
 
 
 def mapsdi_create_kg(dis: DIS, engine: Engine = "sdm",
+                     dedup: Optional[str] = None,
                      ) -> Tuple[Table, Dict[str, object]]:
-    """Pre-process + RDFize; returns (KG, stats incl. Table-1-style sizes)."""
+    """Pre-process + RDFize; returns (KG, stats incl. Table-1-style sizes).
+
+    ``dedup`` selects the δ strategy (``"lex"`` | ``"hash"``) for both the
+    Rule 1–3 pre-processing and the RDFizer sinks; None = engine default.
+    """
     t0 = time.perf_counter()
-    dis2, tstats = apply_mapsdi(dis)
+    dis2, tstats = apply_mapsdi(dis, dedup=dedup)
     t1 = time.perf_counter()
-    rdfizer = RDFizer(dis2, engine)
+    rdfizer = RDFizer(dis2, engine, dedup=dedup)
     kg, raw = rdfizer()
     kg.data.block_until_ready()
     t2 = time.perf_counter()
@@ -41,11 +46,12 @@ def mapsdi_create_kg(dis: DIS, engine: Engine = "sdm",
     }
 
 
-def make_mapsdi_fn(dis: DIS, engine: Engine = "sdm"):
+def make_mapsdi_fn(dis: DIS, engine: Engine = "sdm",
+                   dedup: Optional[str] = None):
     """Pre-transform once (planning), return jit-friendly semantify closure
     over the *transformed* sources — what steady-state re-execution runs."""
-    dis2, _ = apply_mapsdi(dis)
-    rdfizer = RDFizer(dis2, engine)
+    dis2, _ = apply_mapsdi(dis, dedup=dedup)
+    rdfizer = RDFizer(dis2, engine, dedup=dedup)
 
     def fn(sources: Optional[Dict[str, Table]] = None):
         return rdfizer(sources if sources is not None else dis2.sources)

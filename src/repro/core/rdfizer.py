@@ -12,6 +12,11 @@ two studied engines:
 
 A triple is a row of the 5-column table ``(s_t, s_v, p, o_t, o_v)`` — see
 :mod:`repro.core.schema` for term encoding.
+
+Both engines' duplicate elimination (the per-map SDM dedup and the sink δ)
+goes through the shared relalg strategies: ``dedup="hash"`` (default) runs
+the rowhash-based single-key-sort path, ``dedup="lex"`` the K-key
+lexicographic path; results are bit-identical.
 """
 from __future__ import annotations
 
@@ -67,11 +72,13 @@ class RDFizer:
     the closure can be jitted and re-run as sources change."""
 
     def __init__(self, dis: DIS, engine: Engine = "rmlmapper",
-                 join_caps: Optional[Dict[Tuple[str, int], int]] = None):
+                 join_caps: Optional[Dict[Tuple[str, int], int]] = None,
+                 dedup: Optional[str] = None):
         if engine not in ("rmlmapper", "sdm"):
             raise ValueError(f"unknown engine {engine!r}")
         self.dis = dis
         self.engine = engine
+        self.dedup = dedup  # δ strategy: 'lex' | 'hash' | None (default)
         self.join_caps = plan_join_caps(dis) if join_caps is None else join_caps
         self.rdf_type_code = dis.vocab.intern(RDF_TYPE)
         # pre-intern every constant so tracing is side-effect free
@@ -188,18 +195,20 @@ class RDFizer:
         sources = self.dis.sources if sources is None else sources
         per_map = [self.eval_map(tm, sources) for tm in self.dis.maps]
         if self.engine == "sdm":
-            per_map = [distinct(t) for t in per_map]
+            per_map = [distinct(t, dedup=self.dedup) for t in per_map]
         raw = jnp.sum(jnp.stack([t.count for t in per_map]))
         data = jnp.concatenate([t.data for t in per_map], axis=0)
         mask = jnp.concatenate([t.valid_mask for t in per_map])
         data, count = compact(data, mask)
-        kg = distinct(Table(data=data, count=count, attrs=TRIPLE_ATTRS))
+        kg = distinct(Table(data=data, count=count, attrs=TRIPLE_ATTRS),
+                      dedup=self.dedup)
         return kg, raw
 
 
-def rdfize(dis: DIS, engine: Engine = "rmlmapper") -> Tuple[Table, int]:
+def rdfize(dis: DIS, engine: Engine = "rmlmapper",
+           dedup: Optional[str] = None) -> Tuple[Table, int]:
     """Eager convenience wrapper: ``RDFize(DIS)`` -> (KG, raw count)."""
-    kg, raw = RDFizer(dis, engine)()
+    kg, raw = RDFizer(dis, engine, dedup=dedup)()
     return kg, int(raw)
 
 

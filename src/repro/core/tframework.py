@@ -16,10 +16,11 @@ from .rdfizer import Engine, RDFizer
 from .schema import DIS
 
 
-def t_framework_create_kg(dis: DIS, engine: Engine = "rmlmapper"
+def t_framework_create_kg(dis: DIS, engine: Engine = "rmlmapper",
+                          dedup: Optional[str] = None
                           ) -> Tuple[Table, Dict[str, int]]:
     """RDFize the untransformed DIS; returns (KG, stats)."""
-    rdfizer = RDFizer(dis, engine)
+    rdfizer = RDFizer(dis, engine, dedup=dedup)
     kg, raw = rdfizer()
     return kg, {
         "raw_triples": int(raw),
@@ -28,9 +29,10 @@ def t_framework_create_kg(dis: DIS, engine: Engine = "rmlmapper"
     }
 
 
-def make_t_framework_fn(dis: DIS, engine: Engine = "rmlmapper"):
+def make_t_framework_fn(dis: DIS, engine: Engine = "rmlmapper",
+                        dedup: Optional[str] = None):
     """jit-friendly closure (sources pytree -> (kg, raw)) for benchmarking."""
-    rdfizer = RDFizer(dis, engine)
+    rdfizer = RDFizer(dis, engine, dedup=dedup)
 
     def fn(sources: Optional[Dict[str, Table]] = None):
         return rdfizer(sources if sources is not None else dis.sources)

@@ -57,11 +57,13 @@ class TransformStats:
 # Rules 1 & 2: projection (+dedup) pushdown
 # ---------------------------------------------------------------------------
 
-def apply_projection(dis: DIS, stats: Optional[TransformStats] = None) -> DIS:
+def apply_projection(dis: DIS, stats: Optional[TransformStats] = None,
+                     dedup: Optional[str] = None) -> DIS:
     """Rules 1 and 2. Each map's source is replaced by
     ``δ(π_{referenced}(S))``; identical (source, attr-set) projections are
     shared between maps. Maps are rewritten in place (attr names survive,
-    so only ``TripleMap.source`` changes)."""
+    so only ``TripleMap.source`` changes). ``dedup`` picks the δ strategy
+    (``"lex"`` | ``"hash"``; None = engine default)."""
     needed = referenced_attrs(dis)
     out = dis.copy()
     shared: Dict[Tuple[str, Tuple[str, ...]], str] = {}
@@ -74,7 +76,8 @@ def apply_projection(dis: DIS, stats: Optional[TransformStats] = None) -> DIS:
             continue
         key = (tm.source, attrs)
         if key not in shared:
-            proj = distinct(project_as(src, [(a, a) for a in attrs]))
+            proj = distinct(project_as(src, [(a, a) for a in attrs]),
+                            dedup=dedup)
             proj = shrink_to_fit(proj)
             name = f"{tm.source}__pi_" + "_".join(attrs)
             out.sources[name] = proj
@@ -102,11 +105,13 @@ def _join_parents(dis: DIS) -> Set[str]:
             if isinstance(p.object, RefObjectMap)}
 
 
-def apply_merge(dis: DIS, stats: Optional[TransformStats] = None) -> DIS:
+def apply_merge(dis: DIS, stats: Optional[TransformStats] = None,
+                dedup: Optional[str] = None) -> DIS:
     """Rule 3 on every mergeable group. Maps that serve as join parents are
     conservatively kept separate (their names are referenced by other maps).
     Canonical role attrs are ``__m0`` (subject) and ``__m{i}`` for the i-th
-    (predicate-sorted) object reference."""
+    (predicate-sorted) object reference. ``dedup`` picks the δ strategy for
+    the merged-source set-union."""
     parents = _join_parents(dis)
     out = dis.copy()
     merged_any = False
@@ -147,7 +152,7 @@ def apply_merge(dis: DIS, stats: Optional[TransformStats] = None) -> DIS:
             part = project_as(dis.sources[tm.source], spec)
             merged = part if merged is None else union(merged, part)
         assert merged is not None
-        merged = shrink_to_fit(distinct(merged))
+        merged = shrink_to_fit(distinct(merged, dedup=dedup))
         merged_name = f"merged_{gi}_" + "_".join(tm.name for tm in group)
 
         subject = (dataclasses.replace(lead.subject, attr="__m0")
@@ -186,17 +191,19 @@ def _dis_signature(dis: DIS) -> Tuple:
 
 
 def apply_mapsdi(dis: DIS, max_iters: int = 8,
-                 stats: Optional[TransformStats] = None
+                 stats: Optional[TransformStats] = None,
+                 dedup: Optional[str] = None
                  ) -> Tuple[DIS, TransformStats]:
     """Rules 1–3 to a fixpoint (the paper applies them "until a fixed point
-    over S' and M' is reached")."""
+    over S' and M' is reached"). ``dedup`` picks the δ strategy used by
+    every rule application."""
     stats = stats or TransformStats()
     stats.source_rows_before = {k: int(v.count) for k, v in dis.sources.items()}
     cur = dis
     prev_sig = None
     for _ in range(max_iters):
-        cur = apply_merge(cur, stats)
-        cur = apply_projection(cur, stats)
+        cur = apply_merge(cur, stats, dedup=dedup)
+        cur = apply_projection(cur, stats, dedup=dedup)
         sig = _dis_signature(cur)
         if sig == prev_sig:
             break

@@ -1,5 +1,8 @@
-from .ops import rowhash
-from .ref import rowhash_ref
-from .rowhash import rowhash_pallas
+from .ops import hash_neighbor_flags, rowhash
+from .ref import hash_neighbor_flags_ref, rowhash_ref
+from .rowhash import hash_neighbor_flags_pallas, rowhash_pallas
 
-__all__ = ["rowhash", "rowhash_ref", "rowhash_pallas"]
+__all__ = [
+    "hash_neighbor_flags", "hash_neighbor_flags_pallas",
+    "hash_neighbor_flags_ref", "rowhash", "rowhash_ref", "rowhash_pallas",
+]

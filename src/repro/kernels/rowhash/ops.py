@@ -1,10 +1,12 @@
-"""Dispatching wrapper: Pallas on TPU, oracle (or interpret mode) on CPU."""
+"""Dispatching wrappers: Pallas on TPU, oracle (or interpret mode) on CPU."""
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 
-from .ref import rowhash_ref
-from .rowhash import rowhash_pallas
+from .ref import hash_neighbor_flags_ref, rowhash_ref
+from .rowhash import hash_neighbor_flags_pallas, rowhash_pallas
 
 
 def _on_tpu() -> bool:
@@ -19,3 +21,19 @@ def rowhash(x: jax.Array, *, use_pallas: bool | None = None,
     if use_pallas:
         return rowhash_pallas(x, block_n=block_n, interpret=not _on_tpu())
     return rowhash_ref(x)
+
+
+def hash_neighbor_flags(rows: jax.Array, *, use_pallas: bool | None = None,
+                        block_n: int = 256
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused (hash, keep, collide) over hash-sorted ``rows[N, K]``.
+
+    Kernel on TPU, pure-jnp oracle elsewhere (the Pallas interpreter is far
+    slower than the oracle for this memory-bound pass).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return hash_neighbor_flags_pallas(rows, block_n=block_n,
+                                          interpret=not _on_tpu())
+    return hash_neighbor_flags_ref(rows)

@@ -1,9 +1,15 @@
-"""Pure-jnp oracle for the row-hash kernel.
+"""Pure-jnp oracles for the row-hash kernel family.
 
 FNV/murmur-style 32-bit mixing hash over the columns of an int32 row
-matrix. Used by the distributed dedup to repartition rows so that equal
-rows land on the same shard; collisions are harmless there (the local
-distinct re-checks full rows), but good mixing keeps buckets balanced.
+matrix, plus the fused hash+neighbor-flag pass used by hash-first
+duplicate elimination. The hash is used in two places:
+
+* distributed dedup — repartition rows so equal rows land on the same
+  shard; collisions are harmless there (the local distinct re-checks full
+  rows), but good mixing keeps buckets balanced;
+* single-device hash-first δ — sort once on the 32-bit hash instead of a
+  K-key lexicographic sort; collisions are detected (equal hash, unequal
+  row) and trigger an exact fallback.
 """
 from __future__ import annotations
 
@@ -37,3 +43,29 @@ def rowhash_ref(x: jax.Array) -> jax.Array:
         v = fmix32(x[:, col].astype(jnp.uint32) + salt)
         h = (h ^ v) * jnp.uint32(FNV_PRIME)
     return fmix32(h)
+
+
+def hash_neighbor_flags_ref(rows: jax.Array
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused pass over hash-sorted rows: ``(hash, keep, collide)``.
+
+    ``rows[N, K]`` must already be sorted by row hash. For each row i:
+
+    * ``hash[i]``    — the 32-bit row hash (recomputed; one read of the row),
+    * ``keep[i]``    — 1 iff row i differs from row i-1 in hash or content
+                       (first occurrence of a duplicate run; row 0 always 1),
+    * ``collide[i]`` — 1 iff hash[i] == hash[i-1] but the rows differ — a
+                       genuine 32-bit collision that makes the neighbor
+                       keep-mask inexact and forces the lex fallback.
+    """
+    assert rows.ndim == 2
+    h = rowhash_ref(rows)
+    prev_rows = jnp.roll(rows, 1, axis=0)
+    prev_h = jnp.roll(h, 1)
+    row_eq = jnp.all(rows == prev_rows, axis=1)
+    hash_eq = h == prev_h
+    keep = ~(hash_eq & row_eq)
+    collide = hash_eq & ~row_eq
+    keep = keep.at[0].set(True)
+    collide = collide.at[0].set(False)
+    return h, keep.astype(jnp.int32), collide.astype(jnp.int32)

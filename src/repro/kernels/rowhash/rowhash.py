@@ -1,13 +1,21 @@
-"""Pallas TPU kernel: 32-bit mixing hash over int32 rows.
+"""Pallas TPU kernels: 32-bit mixing hash over int32 rows, plus the fused
+hash + sorted-neighbor-flag pass behind hash-first duplicate elimination.
 
 One grid step processes a ``(block_n, K)`` tile resident in VMEM and writes
-``block_n`` hashes. The K-column mix is unrolled (K is static and small for
-relational rows), so the kernel is a single fused VPU pass over the tile —
-one HBM read per element, one HBM write per row.
+``block_n`` outputs. The K-column mix is unrolled (K is static and small for
+relational rows), so each kernel is a single fused VPU pass over the tile —
+one HBM read per element, one HBM write per output row.
+
+``hash_neighbor_flags_pallas`` additionally compares every row with its
+predecessor (the row above in hash-sorted order): the tile-internal shift is
+a VMEM roll, and each tile's first row compares against a per-block boundary
+row gathered outside the kernel, so hash, neighbor compare and keep-mask all
+happen in one pass without re-reading the matrix.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,14 +34,18 @@ def _fmix32(x):
     return x
 
 
-def _rowhash_kernel(x_ref, o_ref, *, k: int):
-    x = x_ref[...].astype(jnp.uint32)          # [block_n, K] in VMEM
+def _row_hashes(x: jax.Array, k: int) -> jax.Array:
+    """Hash the rows of a [*, K] uint32 tile (static unroll over columns)."""
     h = jnp.full((x.shape[0],), jnp.uint32(FNV_OFFSET), dtype=jnp.uint32)
-    for col in range(k):                        # static unroll over columns
+    for col in range(k):
         salt = jnp.uint32((GOLDEN * (col + 1)) & 0xFFFFFFFF)
         v = _fmix32(x[:, col] + salt)
         h = (h ^ v) * jnp.uint32(FNV_PRIME)
-    o_ref[...] = _fmix32(h)
+    return _fmix32(h)
+
+
+def _rowhash_kernel(x_ref, o_ref, *, k: int):
+    o_ref[...] = _row_hashes(x_ref[...].astype(jnp.uint32), k)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -53,3 +65,66 @@ def rowhash_pallas(x: jax.Array, *, block_n: int = 256,
         interpret=interpret,
     )(x)
     return out[:n]
+
+
+def _hash_flags_kernel(x_ref, b_ref, h_ref, keep_ref, coll_ref, *, k: int):
+    x = x_ref[...].astype(jnp.uint32)          # [block_n, K] in VMEM
+    b = b_ref[...].astype(jnp.uint32)          # [1, K] boundary (prev block's
+    #                                            last row; row 0 for block 0)
+    h = _row_hashes(x, k)
+    hb = _row_hashes(b, k)                      # [1]
+    idx = lax.broadcasted_iota(jnp.int32, (x.shape[0], 1), 0)[:, 0]
+    first_in_tile = idx == 0
+    prev_rows = jnp.where(first_in_tile[:, None],
+                          jnp.broadcast_to(b, x.shape),
+                          jnp.roll(x, 1, axis=0))
+    prev_h = jnp.where(first_in_tile, jnp.broadcast_to(hb, h.shape),
+                       jnp.roll(h, 1))
+    row_eq = jnp.all(x == prev_rows, axis=1)
+    hash_eq = h == prev_h
+    keep = ~(hash_eq & row_eq)
+    coll = hash_eq & ~row_eq
+    # the very first row of the whole matrix has no predecessor
+    global_first = (pl.program_id(0) == 0) & first_in_tile
+    keep = keep | global_first
+    coll = coll & ~global_first
+    h_ref[...] = h
+    keep_ref[...] = keep.astype(jnp.int32)
+    coll_ref[...] = coll.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def hash_neighbor_flags_pallas(rows: jax.Array, *, block_n: int = 256,
+                               interpret: bool = False
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused flags over hash-sorted ``rows[N, K]``: ``(hash, keep, collide)``.
+
+    ``keep[i]`` is 1 iff row i differs from row i-1 (hash or content) — the
+    first-occurrence mask of a duplicate run. ``collide[i]`` is 1 iff the
+    hashes match but the rows differ (a genuine 32-bit collision). Semantics
+    match :func:`repro.kernels.rowhash.ref.hash_neighbor_flags_ref`.
+    """
+    n, k = rows.shape
+    n_pad = ((n + block_n - 1) // block_n) * block_n
+    if n_pad != n:
+        rows = jnp.pad(rows, ((0, n_pad - n), (0, 0)))
+    n_blocks = n_pad // block_n
+    # boundary[i] = last row of block i-1 (block 0 gets row 0: the kernel
+    # overrides the global first row anyway)
+    last_of_block = rows[block_n - 1::block_n]
+    boundary = jnp.concatenate([rows[:1], last_of_block[:n_blocks - 1]],
+                               axis=0)
+    h, keep, coll = pl.pallas_call(
+        functools.partial(_hash_flags_kernel, k=k),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+                  pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((n_pad,), jnp.uint32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.int32)),
+        interpret=interpret,
+    )(rows, boundary)
+    return h[:n], keep[:n], coll[:n]

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import TPUCompilerParams
+
 
 def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, fs_ref,
                   state, *, num_chunks: int):
@@ -78,7 +80,7 @@ def rwkv6_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((b * h, t, n), r.dtype),
                    jax.ShapeDtypeStruct((b * h, n, n), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rf, kf, vf, wf, u)

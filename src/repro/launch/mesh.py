@@ -27,9 +27,12 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str],
     if len(devices) < n:
         raise ValueError(f"need {n} devices, have {len(devices)}")
     dev_array = np.asarray(devices[:n]).reshape(tuple(shape))
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:  # pre-0.5 JAX: every axis is Auto implicitly
+        return jax.sharding.Mesh(dev_array, tuple(axes))
     return jax.sharding.Mesh(
         dev_array, tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

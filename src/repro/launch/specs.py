@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.distributed.sharding import (AxisRules, ParamSpec,
                                         abstract_params, spec_tree_map)
@@ -180,7 +181,7 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Optional[Mesh],
                 lambda _: P(), opt_spec_tree["opt"],
                 is_leaf=lambda x: isinstance(x, ParamSpec))
             ef_p = spec_tree_map(lambda _: P(("pod", "data")), p_specs)
-            fn = jax.shard_map(
+            fn = shard_map(
                 inner, mesh=mesh, axis_names={"pod", "data"},
                 in_specs=(rep, {"opt": rep_opt, "ef": ef_p},
                           {k: P(("pod", "data")) for k in

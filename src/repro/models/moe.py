@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import shard_map
 from repro.distributed.sharding import ParamSpec
 from .layers import (Params, ShardCtx, attn_block_unroll, constrain, embed,
                      embed_specs, layer_unroll, mlp, mlp_specs, norm_specs,
@@ -160,7 +161,7 @@ def moe_block_local(cfg, p: Params, x: jax.Array, ctx: ShardCtx
         return (buf.reshape(1, e_local, cap, d), dest[None],
                 tok_sorted[None], w_sorted[None])
 
-    buf, dest, tok, ws = jax.shard_map(
+    buf, dest, tok, ws = shard_map(
         dispatch, mesh=mesh, axis_names=set(dn) | {"model"},
         in_specs=(P(dn, None), P(None, None)),
         out_specs=(P(dn, "model", None, None), P(dn, None), P(dn, None),
@@ -194,7 +195,7 @@ def moe_block_local(cfg, p: Params, x: jax.Array, ctx: ShardCtx
         # bf16 scatter-add, at half the collective bytes)
         return lax.psum(out.astype(jnp.bfloat16), "model")[None]
 
-    out = jax.shard_map(
+    out = shard_map(
         combine, mesh=mesh, axis_names=set(dn) | {"model"},
         in_specs=(P(dn, "model", None, None), P(dn, None), P(dn, None),
                   P(dn, None)),

@@ -1,12 +1,13 @@
 """Relational-algebra substrate: fixed-shape columnar tables on device."""
 from .encoding import PAD_ID, Vocab
 from .table import Table
-from .ops import (compact, distinct, distinct_rows, equi_join, project,
-                  project_as, rename, select_eq, select_mask, select_neq,
-                  sort_lex, union)
+from .ops import (DEFAULT_DEDUP, compact, dedup_rows, distinct, distinct_rows,
+                  distinct_rows_hashed, equi_join, project, project_as,
+                  rename, select_eq, select_mask, select_neq, sort_lex, union)
 
 __all__ = [
-    "PAD_ID", "Vocab", "Table", "compact", "distinct", "distinct_rows",
-    "equi_join", "project", "project_as", "rename", "select_eq",
-    "select_mask", "select_neq", "sort_lex", "union",
+    "DEFAULT_DEDUP", "PAD_ID", "Vocab", "Table", "compact", "dedup_rows",
+    "distinct", "distinct_rows", "distinct_rows_hashed", "equi_join",
+    "project", "project_as", "rename", "select_eq", "select_mask",
+    "select_neq", "sort_lex", "union",
 ]

@@ -8,17 +8,50 @@ These are the building blocks the MapSDI transformation rules are defined
 over: projection (Rule 1/2), union+rename (Rule 3), distinct (duplicate
 elimination), and the sort-merge equi-join used by triple-map join
 conditions.
+
+Duplicate elimination (δ) — the single hottest operator in both MapSDI
+pre-processing and the RDFizer sinks — comes in two strategies:
+
+* ``"lex"``  — full K-key lexicographic ``lax.sort`` over every column,
+  then a neighbor compare. Always exact; cost grows with K.
+* ``"hash"`` — the default: one Pallas ``rowhash`` pass turns each row into
+  a 32-bit key, a single-key sort carries the row permutation, and a fused
+  hash+neighbor-flag kernel verifies full-row equality of sorted neighbors.
+  Detected 32-bit collisions (equal hash, unequal row) trigger a
+  ``lax.cond`` fallback to the exact lex path, so the result is always
+  bit-identical to ``"lex"``. See ``docs/relalg.md`` for the correctness
+  argument.
+
+``DEFAULT_DEDUP`` selects the engine-wide default; every δ entry point
+(:func:`distinct`, :func:`union` with dedup, the RDFizer, the Rule 1–3
+transforms and the distributed dedup) accepts a ``dedup`` override.
 """
 from __future__ import annotations
 
-from typing import Mapping, Sequence, Tuple
+from typing import Callable, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels.rowhash import hash_neighbor_flags, rowhash
+
 from .encoding import PAD_ID
 from .table import Table
+
+# Engine-wide default δ strategy. "hash" is exact (collision fallback) and
+# turns the K-key sort into a single-key sort; "lex" is the classic path.
+DEFAULT_DEDUP = "hash"
+
+_UINT32_MAX = 0xFFFFFFFF
+
+
+def _resolve_dedup(dedup: Optional[str]) -> str:
+    strategy = DEFAULT_DEDUP if dedup is None else dedup
+    if strategy not in ("lex", "hash"):
+        raise ValueError(f"unknown dedup strategy {strategy!r} "
+                         "(expected 'lex' or 'hash')")
+    return strategy
 
 
 # ---------------------------------------------------------------------------
@@ -100,13 +133,14 @@ def select_neq(table: Table, attr: str, code: jax.Array | int) -> Table:
 
 def distinct_rows(data: jax.Array, count: jax.Array
                   ) -> Tuple[jax.Array, jax.Array]:
-    """Matrix-level δ: ``data[N, K]`` with ``count`` valid rows ->
+    """Matrix-level lex δ: ``data[N, K]`` with ``count`` valid rows ->
     deduplicated ``(data, count)``. Shared by Table ops and the shard_map
     distributed dedup (which works on raw row matrices inside shards).
 
     Lexicographic full-row sort, then first-occurrence compaction. This is
     the TPU-native replacement for a hash table: one fused ``lax.sort`` over
-    all columns, a neighbour compare, and a cumsum scatter.
+    all columns, a neighbour compare, and a cumsum scatter. Always exact;
+    also the collision fallback of :func:`distinct_rows_hashed`.
     """
     capacity, k = data.shape
     valid_in = jnp.arange(capacity, dtype=jnp.int32) < count
@@ -121,9 +155,86 @@ def distinct_rows(data: jax.Array, count: jax.Array
     return compact(sorted_data, first & valid)
 
 
-def distinct(table: Table) -> Table:
-    """δ — eliminate duplicate rows (set semantics)."""
-    data, count = distinct_rows(table.data, table.count)
+def distinct_rows_hashed(data: jax.Array, count: jax.Array, *,
+                         use_pallas: Optional[bool] = None,
+                         hash_fn: Optional[Callable[[jax.Array], jax.Array]]
+                         = None) -> Tuple[jax.Array, jax.Array]:
+    """Matrix-level hash-first δ — bit-identical results to
+    :func:`distinct_rows`, one single-key sort instead of a K-key sort.
+
+    Pipeline: ``rowhash`` (Pallas on TPU) -> stable single-key sort on the
+    32-bit hash carrying the row permutation -> fused hash+neighbor-flag
+    kernel (recomputes the hash, compares each sorted row to its predecessor
+    in one VMEM pass) -> first-occurrence compaction.
+
+    Correctness under collisions: the keep-mask only merges *adjacent equal
+    rows*, so a collision can never drop a distinct row. It could keep a
+    duplicate (two equal rows separated by a colliding distinct row), but
+    that interleaving requires an equal-hash run containing two different
+    row values — exactly the ``collide`` flag the fused kernel raises, which
+    routes the whole call through the exact lex path via ``lax.cond``.
+
+    ``hash_fn`` overrides the row hash (tests force collisions with it);
+    the pure-jnp flag path is used then, since the fused kernel hard-codes
+    the production hash.
+    """
+    capacity, k = data.shape
+    idx = jnp.arange(capacity, dtype=jnp.int32)
+    valid_in = idx < count
+    masked = jnp.where(valid_in[:, None], data, jnp.int32(PAD_ID))
+
+    h = (rowhash(masked, use_pallas=use_pallas) if hash_fn is None
+         else hash_fn(masked))
+    # padding sorts last: stable sort keeps valid rows (smaller original
+    # index) ahead of pads even when a valid row genuinely hashes to max
+    h = jnp.where(valid_in, h, jnp.uint32(_UINT32_MAX))
+    _, perm = lax.sort((h, idx), dimension=0, num_keys=1)
+    rows = masked[perm]
+    valid_s = perm < count
+
+    if hash_fn is None:
+        _, keep_raw, coll_raw = hash_neighbor_flags(rows,
+                                                    use_pallas=use_pallas)
+        keep_raw = keep_raw.astype(bool)
+        coll_raw = coll_raw.astype(bool)
+    else:
+        hs = h[perm]
+        prev_rows = jnp.roll(rows, 1, axis=0)
+        row_eq = jnp.all(rows == prev_rows, axis=1)
+        hash_eq = hs == jnp.roll(hs, 1)
+        keep_raw = (~(hash_eq & row_eq)).at[0].set(True)
+        coll_raw = (hash_eq & ~row_eq).at[0].set(False)
+
+    prev_valid = jnp.roll(valid_s, 1).at[0].set(False)
+    collision = jnp.any(coll_raw & valid_s & prev_valid)
+    keep = keep_raw & valid_s
+
+    return lax.cond(collision,
+                    lambda: distinct_rows(data, count),
+                    lambda: compact(rows, keep))
+
+
+def dedup_rows(data: jax.Array, count: jax.Array,
+               dedup: Optional[str] = None, *,
+               use_pallas: Optional[bool] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Matrix-level δ under the selected strategy (None = engine default).
+
+    The single implementation shared by :func:`distinct`, set-:func:`union`,
+    the RDFizer sinks and the distributed shard-local dedup.
+    """
+    if _resolve_dedup(dedup) == "lex":
+        return distinct_rows(data, count)
+    return distinct_rows_hashed(data, count, use_pallas=use_pallas)
+
+
+def distinct(table: Table, dedup: Optional[str] = None) -> Table:
+    """δ — eliminate duplicate rows (set semantics).
+
+    ``dedup`` picks the strategy (``"lex"`` | ``"hash"``; None = engine
+    default, :data:`DEFAULT_DEDUP`). Both produce identical row sets.
+    """
+    data, count = dedup_rows(table.data, table.count, dedup)
     return Table(data=data, count=count, attrs=table.attrs)
 
 
@@ -131,11 +242,13 @@ def distinct(table: Table) -> Table:
 # binary operators
 # ---------------------------------------------------------------------------
 
-def union(a: Table, b: Table, dedup: bool = False) -> Table:
+def union(a: Table, b: Table, dedup: bool | str = False) -> Table:
     """∪ — concatenate rows (b's columns aligned to a's attr order).
 
-    With ``dedup=True`` this is set-union (π/∪/δ as in Transformation
-    Rule 3); otherwise bag-union.
+    ``dedup`` selects the semantics: ``False`` is bag-union; ``True`` is
+    set-union (π/∪/δ as in Transformation Rule 3) under the engine-default
+    δ strategy; a strategy string (``"lex"`` | ``"hash"``) is set-union
+    under that strategy.
     """
     if set(a.attrs) != set(b.attrs):
         raise ValueError(f"union schema mismatch: {a.attrs} vs {b.attrs}")
@@ -144,7 +257,9 @@ def union(a: Table, b: Table, dedup: bool = False) -> Table:
     keep = jnp.concatenate([a.valid_mask, b_aligned.valid_mask])
     data, count = compact(data, keep)
     out = Table(data=data, count=count, attrs=a.attrs)
-    return distinct(out) if dedup else out
+    if dedup is False:
+        return out
+    return distinct(out, dedup=None if dedup is True else dedup)
 
 
 def equi_join(left: Table, right: Table, left_key: str, right_key: str,

@@ -1,6 +1,9 @@
 """KG -> token pipeline: determinism, elasticity, weighted rebalance."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="test extra: pip install -r "
+                    "requirements.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pipeline import mapsdi_create_kg

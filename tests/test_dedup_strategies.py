@@ -1,0 +1,167 @@
+"""Hash-first δ must be bit-identical to the lex-sort δ — everywhere.
+
+Covers the matrix-level paths (`distinct_rows_hashed` vs `distinct_rows`),
+the Table ops (`distinct`, set-`union`), the RDFizer sinks, the Rule 1–3
+transforms, and the distributed dedup — including adversarial inputs with
+*real* 32-bit rowhash collisions (pairs found by brute force against the
+production hash) and degenerate hash functions that force every row into
+one hash bucket.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import mapsdi_create_kg
+from repro.core.tframework import t_framework_create_kg
+from repro.core.distributed import distributed_distinct_table
+from repro.data.synthetic import make_group_a_dis
+from repro.kernels.rowhash import rowhash_ref
+from repro.launch.mesh import make_mesh
+from repro.relalg import (DEFAULT_DEDUP, PAD_ID, Table, distinct,
+                          distinct_rows, distinct_rows_hashed, union)
+
+# Distinct K=2 rows with IDENTICAL 32-bit rowhash values, found by hashing
+# ~2M random rows with the production hash and keeping birthday collisions.
+COLLIDING_PAIRS = [
+    ([573955, 771106], [1046201, 851388]),
+    ([371750, 616302], [385810, 783927]),
+    ([111516, 1026830], [628226, 432961]),
+    ([225467, 153997], [397535, 951855]),
+]
+
+
+def _table(rows, attrs, capacity=None):
+    codes = (np.asarray(rows, dtype=np.int32)
+             if rows else np.zeros((0, len(attrs)), np.int32))
+    return Table.from_codes(codes, attrs, capacity)
+
+
+def _assert_same_result(t: Table):
+    lex = distinct(t, dedup="lex")
+    hsh = distinct(t, dedup="hash")
+    assert lex.row_set() == hsh.row_set()
+    assert int(lex.count) == int(hsh.count)
+    # identical canonical padding too
+    assert (np.asarray(hsh.data)[int(hsh.count):] == PAD_ID).all()
+
+
+# ---------------------------------------------------------------------------
+# random row-set identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,hi,cap", [
+    (0, 2, 5, 8),          # empty
+    (1, 1, 2, 4),          # single row
+    (64, 1, 4, 64),        # K=1 (hash is injective there)
+    (200, 3, 9, 256),      # heavy duplication
+    (1000, 5, 40, 1024),   # triple-shaped
+    (513, 8, 1 << 20, 520),  # wide rows, nearly all distinct, odd sizes
+])
+def test_distinct_hash_equals_lex(n, k, hi, cap):
+    rng = np.random.default_rng(n + k)
+    rows = rng.integers(0, hi, size=(n, k)).astype(np.int32)
+    _assert_same_result(
+        Table.from_codes(rows, [f"c{i}" for i in range(k)], capacity=cap))
+
+
+def test_default_strategy_is_hash():
+    assert DEFAULT_DEDUP == "hash"
+
+
+# ---------------------------------------------------------------------------
+# adversarial: real 32-bit collisions under the production hash
+# ---------------------------------------------------------------------------
+
+def test_hardcoded_pairs_really_collide():
+    for a, b in COLLIDING_PAIRS:
+        ha, hb = np.asarray(rowhash_ref(jnp.asarray([a, b], jnp.int32)))
+        assert a != b and ha == hb, (a, b, ha, hb)
+
+
+def test_distinct_exact_under_real_collisions():
+    """Duplicates interleaved with rows they collide with — the exact case
+    where a naive neighbor keep-mask over a single-key hash sort would keep
+    a duplicate. The collide flag must route this through the lex path."""
+    rows = []
+    for a, b in COLLIDING_PAIRS:
+        rows += [a, b, a, b, a]          # A,B collide; A and B each repeat
+    rows += [[7, 7], [8, 9], [7, 7]]     # plus ordinary duplicates
+    t = _table(rows, ["x", "y"], capacity=64)
+    _assert_same_result(t)
+    expected = {tuple(r) for r in rows}
+    assert distinct(t, dedup="hash").row_set() == expected
+
+
+def test_union_exact_under_real_collisions():
+    (a1, b1), (a2, b2) = COLLIDING_PAIRS[0], COLLIDING_PAIRS[1]
+    ta = _table([a1, b1, a2, a1], ["x", "y"], capacity=8)
+    tb = _table([b1, a2, b2, b2], ["x", "y"], capacity=8)
+    want = ta.row_set() | tb.row_set()
+    assert union(ta, tb, dedup="hash").row_set() == want
+    assert union(ta, tb, dedup="lex").row_set() == want
+    assert union(ta, tb, dedup=True).row_set() == want
+
+
+# ---------------------------------------------------------------------------
+# forced total collisions via hash_fn (every row in one bucket)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,fn", [
+    ("constant", lambda x: jnp.zeros((x.shape[0],), jnp.uint32)),
+    ("mod4", lambda x: (x[:, 0].astype(jnp.uint32)) % jnp.uint32(4)),
+])
+def test_forced_collision_hash_fn(name, fn):
+    rng = np.random.default_rng(11)
+    rows = rng.integers(0, 7, size=(100, 3)).astype(np.int32)
+    t = Table.from_codes(rows, ["a", "b", "c"], capacity=128)
+    data, count = distinct_rows_hashed(t.data, t.count, hash_fn=fn)
+    ref_data, ref_count = distinct_rows(t.data, t.count)
+    assert int(count) == int(ref_count)
+    np.testing.assert_array_equal(np.asarray(data), np.asarray(ref_data))
+
+
+# ---------------------------------------------------------------------------
+# engine-level identity: RDFizer + transforms, both engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["rmlmapper", "sdm"])
+def test_rdfizer_hash_equals_lex(engine):
+    kg_lex, _ = t_framework_create_kg(
+        make_group_a_dis(120, 0.5, seed=3), engine, dedup="lex")
+    kg_hash, _ = t_framework_create_kg(
+        make_group_a_dis(120, 0.5, seed=3), engine, dedup="hash")
+    assert kg_lex.row_set() == kg_hash.row_set()
+
+
+def test_mapsdi_pipeline_hash_equals_lex():
+    kg_lex, stats_lex = mapsdi_create_kg(
+        make_group_a_dis(120, 0.5, seed=4), dedup="lex")
+    kg_hash, stats_hash = mapsdi_create_kg(
+        make_group_a_dis(120, 0.5, seed=4), dedup="hash")
+    assert kg_lex.row_set() == kg_hash.row_set()
+    # Rules 1–3 shrink sources identically under either strategy
+    assert stats_lex["source_rows_after"] == stats_hash["source_rows_after"]
+
+
+# ---------------------------------------------------------------------------
+# distributed path shares the strategy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dedup", ["lex", "hash"])
+def test_distributed_dedup_strategies(dedup):
+    mesh = make_mesh((1,), ("data",))
+    rng = np.random.default_rng(17)
+    rows = rng.integers(0, 9, size=(300, 3)).astype(np.int32)
+    t = Table.from_codes(rows, ["a", "b", "c"])
+    out, overflow = distributed_distinct_table(t, mesh, "data", dedup=dedup)
+    assert not overflow
+    assert out.row_set() == distinct(t, dedup="lex").row_set()
+
+
+def test_distributed_dedup_under_real_collisions():
+    mesh = make_mesh((1,), ("data",))
+    rows = [list(p[i]) for p in COLLIDING_PAIRS for i in (0, 1, 0)]
+    t = _table(rows, ["x", "y"], capacity=32)
+    out, overflow = distributed_distinct_table(t, mesh, "data", dedup="hash")
+    assert not overflow
+    assert out.row_set() == {tuple(r) for r in rows}

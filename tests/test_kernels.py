@@ -230,3 +230,40 @@ def test_rowhash_distribution():
     hd = np.asarray(rowhash(jnp.asarray(distinct))).astype(np.uint64) % 8
     assert len(np.unique(hd)) >= 4
     assert len(np.unique(buckets)) >= 4
+
+
+# ---------------------------------------------------------------------------
+# fused hash + neighbor-flag kernel (hash-first dedup)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,block_n", [
+    (64, 2, 16), (300, 4, 64), (1024, 5, 256), (257, 3, 128),
+])
+def test_hash_neighbor_flags_matches_ref(n, k, block_n):
+    from repro.kernels.rowhash.ref import hash_neighbor_flags_ref
+    from repro.kernels.rowhash.rowhash import hash_neighbor_flags_pallas
+    r = _rng(21)
+    rows = r.integers(0, 6, (n, k)).astype(np.int32)  # many duplicate runs
+    h = np.asarray(rowhash_ref(jnp.asarray(rows)))
+    rows = jnp.asarray(rows[np.argsort(h, kind="stable")])  # hash-sorted
+    got = hash_neighbor_flags_pallas(rows, block_n=block_n, interpret=True)
+    ref = hash_neighbor_flags_ref(rows)
+    for g, want in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(want))
+
+
+def test_hash_neighbor_flags_semantics():
+    """keep = first occurrence of each duplicate run; collide = equal hash,
+    different row (checked on a crafted sequence with both cases)."""
+    from repro.kernels.rowhash.ref import hash_neighbor_flags_ref
+    rows = jnp.asarray([[1, 2], [1, 2], [1, 2], [5, 6]], jnp.int32)
+    h, keep, coll = hash_neighbor_flags_ref(rows)
+    np.testing.assert_array_equal(np.asarray(keep), [1, 0, 0, 1])
+    np.testing.assert_array_equal(np.asarray(coll), [0, 0, 0, 0])
+    # the collide case: adjacent distinct rows with a REAL 32-bit hash
+    # collision (pair brute-forced against the production hash)
+    rows = jnp.asarray([[573955, 771106], [1046201, 851388]], jnp.int32)
+    h, keep, coll = hash_neighbor_flags_ref(rows)
+    assert h[0] == h[1]
+    np.testing.assert_array_equal(np.asarray(keep), [1, 1])  # rows differ
+    np.testing.assert_array_equal(np.asarray(coll), [0, 1])  # flagged

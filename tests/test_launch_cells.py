@@ -3,6 +3,7 @@ import os
 import subprocess
 import sys
 
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -42,6 +43,9 @@ def test_param_counts_active_vs_total():
     assert d["active"] == d["total"]           # dense: all params active
 
 
+@pytest.mark.skipif(not hasattr(jax, "shard_map"),
+                    reason="partial-auto shard_map lowering needs jax>=0.6 "
+                           "(pinned 0.4.x hits PartitionId UNIMPLEMENTED)")
 def test_ef_pod_decoupled_cell_lowers():
     """grad_compress_pods=True on a non-FSDP arch: the pod-decoupled
     shard_map train step lowers + compiles on the multi-pod mesh, and the

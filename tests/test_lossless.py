@@ -7,6 +7,10 @@ triple maps (references / templates / constants / classes), random join
 conditions, random duplication patterns.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="test extra: pip install -r "
+                    "requirements.txt")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import apply_mapsdi, parse_dis, rdfize

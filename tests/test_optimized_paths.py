@@ -178,6 +178,9 @@ print("OK", int(out.count))
 # int8 error-feedback grad compression
 # ---------------------------------------------------------------------------
 
+@pytest.mark.skipif(not hasattr(jax, "shard_map"),
+                    reason="partial-auto shard_map lowering needs jax>=0.6 "
+                           "(pinned 0.4.x hits PartitionId UNIMPLEMENTED)")
 def test_grad_compress_pod_allreduce():
     code = """
 import jax, jax.numpy as jnp, numpy as np
@@ -207,7 +210,8 @@ def driver(gs):
     e = {"w": jnp.zeros_like(g["w"])}
     out, new_e = compress_allreduce(g, e, axis="pod")
     return out["w"]
-got = jax.jit(jax.shard_map(driver, mesh=mesh,
+from repro.compat import shard_map
+got = jax.jit(shard_map(driver, mesh=mesh,
     in_specs=P(None, None, None), out_specs=P(None, None),
     check_vma=False, axis_names=frozenset({"pod"})))(g_pod["w"])
 err = np.abs(np.asarray(got) - want).max() / max(np.abs(want).max(), 1e-9)

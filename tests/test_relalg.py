@@ -1,6 +1,10 @@
 """Unit + property tests for the relational-algebra substrate."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="test extra: pip install -r "
+                    "requirements.txt (non-hypothesis δ coverage lives in "
+                    "test_dedup_strategies.py)")
 from hypothesis import given, settings, strategies as st
 
 from repro.relalg import (PAD_ID, Table, Vocab, distinct, equi_join, project,

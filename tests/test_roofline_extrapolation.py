@@ -8,6 +8,9 @@ import os
 import subprocess
 import sys
 
+import jax
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 CODE = """
@@ -43,6 +46,9 @@ print("OK")
 """
 
 
+@pytest.mark.skipif(not hasattr(jax, "shard_map"),
+                    reason="partial-auto shard_map lowering needs jax>=0.6 "
+                           "(pinned 0.4.x hits PartitionId UNIMPLEMENTED)")
 def test_depth_extrapolation_matches_direct_compile():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
