@@ -7,6 +7,7 @@
   * table1      — paper Table 1: source-size reduction by pre-processing
   * motivating  — paper Fig. 1: the duplicate blow-up
   * dedup       — δ operator sweep: lex vs hash-first vs distributed
+  * planner     — eager fixpoint vs optimizing planner (docs/planner.md)
   * roofline    — collated §Roofline table (from dry-run artifacts)
 
 ``--smoke`` exercises exactly one tiny cell per group (CI wiring: fast,
@@ -26,13 +27,14 @@ def main(argv=None) -> int:
                          "(1.0 = the scaled-down paper testbed)")
     ap.add_argument("--only", default="",
                     help="comma list: group_a,group_b,table1,motivating,"
-                         "dedup,roofline")
+                         "dedup,planner,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny cell per group (CI)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from . import dedup, group_a, group_b, motivating, roofline, table1
+    from . import dedup, group_a, group_b, motivating, planner, roofline, \
+        table1
 
     if args.smoke:
         from repro.configs.mapsdi_paper import CONFIG as PAPER
@@ -55,6 +57,7 @@ def main(argv=None) -> int:
                 scale=0.02, volumes=PAPER.volumes[:1]))),
             ("motivating", lambda: motivating.main(["--rows", "120"])),
             ("dedup", lambda: dedup.main(["--smoke"])),
+            ("planner", lambda: planner.main(["--smoke"])),
             ("roofline", lambda: roofline.main([])),
         ]
     else:
@@ -65,6 +68,8 @@ def main(argv=None) -> int:
             ("motivating", lambda: motivating.main(
                 ["--rows", str(max(200, int(4000 * args.scale)))])),
             ("dedup", lambda: dedup.main([])),
+            ("planner", lambda: planner.main(
+                ["--scale", str(args.scale)])),
             ("roofline", lambda: roofline.main([])),
         ]
     for name, fn in jobs:

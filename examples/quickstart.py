@@ -1,9 +1,11 @@
-"""Quickstart: the paper's Fig. 3/4 example end-to-end in ~40 lines.
+"""Quickstart: the paper's Fig. 3/4 example end-to-end in ~50 lines.
 
 Builds the 9-row gene source, the RML triple map that uses 4 of its 8
-attributes, runs MapSDI (projection pushes duplicates out **before**
-semantification) and the traditional framework, and prints both the
-N-Triples output and the work each framework did.
+attributes, runs MapSDI (the planner pushes projection + dedup below
+semantification, then compiles everything to one jitted closure) and the
+traditional framework, prints the *logical plan* the optimizer produced
+(with per-node plan-time capacities), and both the N-Triples output and
+the work each framework did.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +13,9 @@ from repro.core import parse_dis
 from repro.core.pipeline import mapsdi_create_kg
 from repro.core.rdfizer import triples_to_ntriples
 from repro.core.tframework import t_framework_create_kg
+from repro.core.transform import plan_mapsdi
 from repro.data.synthetic import FIG3_MAP, fig4_gene_source
+from repro.plan import explain
 
 records, attrs = fig4_gene_source()
 dis = parse_dis({"sources": {"genes": {"attrs": attrs, "records": records}},
@@ -24,7 +28,7 @@ kg_t, stats_t = t_framework_create_kg(
 print(f"T-framework : {stats_t['raw_triples']} raw triples generated, "
       f"{stats_t['kg_triples']} after dedup")
 
-# --- MapSDI: project + dedup the SOURCE, then semantify -------------------
+# --- MapSDI: plan (Rules 1-3 + σ + CSE, symbolic), then ONE closure -------
 kg_m, stats_m = mapsdi_create_kg(dis)
 rows_after = sum(stats_m['source_rows_after'].values())
 print(f"MapSDI      : {rows_after} source rows after Rule 1 "
@@ -32,6 +36,11 @@ print(f"MapSDI      : {rows_after} source rows after Rule 1 "
       f"{stats_m['raw_triples']} raw triples, no duplicates generated")
 
 assert kg_m.row_set() == kg_t.row_set(), "Q1: same knowledge graph"
+
+# --- inspect the optimized plan (dump_plan/explain) -----------------------
+print("\nOptimized logical plan (per-node plan-time rows/capacities):")
+plan = plan_mapsdi(dis)
+print(explain(plan, engine="sdm"))
 
 print("\nKnowledge graph (N-Triples):")
 for line in sorted(triples_to_ntriples(kg_m, dis)):

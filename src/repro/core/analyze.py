@@ -31,6 +31,8 @@ def own_referenced_attrs(tm: TripleMap) -> Set[str]:
             attrs.add(pom.object.child_attr)
         elif pom.object.referenced_attr:
             attrs.add(pom.object.referenced_attr)
+    for sel in tm.selections:
+        attrs.add(sel.attr)
     return attrs
 
 
@@ -56,8 +58,9 @@ def referenced_attrs(dis: DIS) -> Dict[str, Set[str]]:
 
 def head_signature(tm: TripleMap) -> Tuple:
     """Rule-3 equivalence key: subject template/class + sorted
-    (predicate, object signature) tuple. Maps with joins never merge."""
-    if tm.has_join:
+    (predicate, object signature) tuple. Maps with joins or σ selections
+    never merge (σ predicates reference source-specific attrs)."""
+    if tm.has_join or tm.selections:
         return ("__nomerge__", tm.name)
     pom_sigs = tuple(sorted(
         (p.predicate,) + p.object.signature() for p in tm.poms))

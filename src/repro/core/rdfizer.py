@@ -13,6 +13,13 @@ two studied engines:
 A triple is a row of the 5-column table ``(s_t, s_v, p, o_t, o_v)`` — see
 :mod:`repro.core.schema` for term encoding.
 
+The interior is the plan executor (:mod:`repro.plan.compile`): the DIS is
+lowered to the logical IR and compiled to ONE jitted closure; the RDFizer
+itself only provides the ``EmitTriples`` semantics (term columns, null and
+σ masks, block assembly). Tracing is side-effect free by construction —
+``__init__`` pre-interns every constant a trace could need and the lookup
+helpers *raise* instead of interning.
+
 Both engines' duplicate elimination (the per-map SDM dedup and the sink δ)
 goes through the shared relalg strategies: ``dedup="hash"`` (default) runs
 the rowhash-based single-key-sort path, ``dedup="lex"`` the K-key
@@ -24,9 +31,9 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.relalg import (PAD_ID, Table, distinct, equi_join, project_as)
+from repro.relalg import Table, round_cap
+from repro.relalg.guard import host_get, host_int
 from repro.relalg.ops import compact
 
 from .schema import (DIS, RDF_TYPE, RefObjectMap, TMPL_CONSTANT, TermMap,
@@ -35,13 +42,12 @@ from .schema import (DIS, RDF_TYPE, RefObjectMap, TMPL_CONSTANT, TermMap,
 Engine = str  # 'rmlmapper' | 'sdm'
 
 
-def _round_cap(n: int, mult: int = 8) -> int:
-    return max(mult, ((int(n) + mult - 1) // mult) * mult)
-
-
 def plan_join_caps(dis: DIS) -> Dict[Tuple[str, int], int]:
     """Exact output capacity per (map, pom_index) join — host-side planning,
-    the analogue of cardinality estimation in a query optimizer."""
+    the analogue of cardinality estimation in a query optimizer. (The plan
+    subsystem's :func:`repro.plan.annotate.annotate` generalizes this to a
+    capacity for every IR node; the counting kernel is shared.)"""
+    from repro.plan.annotate import join_match_total
     caps: Dict[Tuple[str, int], int] = {}
     for tm in dis.maps:
         child = dis.sources[tm.source]
@@ -50,19 +56,11 @@ def plan_join_caps(dis: DIS) -> Dict[Tuple[str, int], int]:
                 continue
             parent_tm = dis.map_by_name(pom.object.parent_map)
             parent = dis.sources[parent_tm.source]
-            c = np.asarray(child.column(pom.object.child_attr))[
-                :int(child.count)]
-            p = np.asarray(parent.column(pom.object.parent_attr))[
-                :int(parent.count)]
-            vals, counts = np.unique(p, return_counts=True)
-            if len(vals) == 0 or len(c) == 0:   # empty side => empty join
-                caps[(tm.name, i)] = _round_cap(0)
-                continue
-            idx = np.searchsorted(vals, c)
-            idx_c = np.clip(idx, 0, len(vals) - 1)
-            match = vals[idx_c] == c
-            total = int(counts[idx_c][match].sum())
-            caps[(tm.name, i)] = _round_cap(total)
+            c = host_get(child.column(pom.object.child_attr))[
+                :host_int(child.count)]
+            p = host_get(parent.column(pom.object.parent_attr))[
+                :host_int(parent.count)]
+            caps[(tm.name, i)] = round_cap(join_match_total(c, p))
     return caps
 
 
@@ -81,7 +79,8 @@ class RDFizer:
         self.dedup = dedup  # δ strategy: 'lex' | 'hash' | None (default)
         self.join_caps = plan_join_caps(dis) if join_caps is None else join_caps
         self.rdf_type_code = dis.vocab.intern(RDF_TYPE)
-        # pre-intern every constant so tracing is side-effect free
+        # pre-intern EVERY constant a trace could touch, so tracing is
+        # side-effect free (the lookups below raise instead of interning)
         self._pred = {p.predicate: dis.vocab.intern(p.predicate)
                       for m in dis.maps for p in m.poms}
         self._class = {m.subject_class: dis.vocab.intern(m.subject_class)
@@ -90,8 +89,22 @@ class RDFizer:
                        for m in dis.maps for p in m.poms
                        if isinstance(p.object, TermMap)
                        and p.object.kind == "constant"}
+        self._subj_const = {m.subject.constant:
+                            dis.vocab.intern(m.subject.constant)
+                            for m in dis.maps if m.subject.kind == "constant"}
+        self._sel = {sel.value: dis.vocab.intern(sel.value)
+                     for m in dis.maps for sel in m.selections
+                     if sel.op in ("eq", "neq")}
         self._subject_tmpl = {m.name: self._term_tmpl(m.subject)
                               for m in dis.maps}
+        # pre-register every object template id too — template_id mutates
+        # dis.templates on a new template, which must not happen mid-trace
+        self._tmpl_ids = {t: self._term_tmpl(t) for m in dis.maps
+                          for t in [m.subject] + [p.object for p in m.poms
+                                                  if isinstance(p.object,
+                                                                TermMap)]}
+        self._plan_caps = None  # (plan, node caps), built lazily
+        self._compiled = None   # jitted sources -> (kg, raw), built lazily
 
     # -- static helpers ------------------------------------------------------
     def _term_tmpl(self, t: TermMap) -> int:
@@ -101,6 +114,15 @@ class RDFizer:
         if t.kind == "constant":
             return TMPL_CONSTANT
         return self.dis.template_id(t.template)
+
+    def _code(self, table: Dict, value, what: str) -> int:
+        code = table.get(value)
+        if code is None:
+            raise RuntimeError(
+                f"{what} {value!r} was not pre-interned; tracing must be "
+                "side-effect free — register it on the DIS before building "
+                "the RDFizer")
+        return code
 
     def _null_ok(self, col: jax.Array) -> jax.Array:
         if self.dis.null_code is None:
@@ -113,13 +135,34 @@ class RDFizer:
         """(tmpl_id, value column, validity) for a non-join term map."""
         cap = table.capacity
         if t.kind == "constant":
-            code = self._const.get(t.constant)
-            if code is None:
-                code = self.dis.vocab.intern(t.constant)
+            code = self._code(self._const, t.constant, "constant")
             col = jnp.full((cap,), jnp.int32(code))
             return TMPL_CONSTANT, col, jnp.ones((cap,), dtype=bool)
         col = table.column(t.attr)
-        return self._term_tmpl(t), col, self._null_ok(col)
+        tmpl = self._tmpl_ids.get(t)
+        if tmpl is None:
+            raise RuntimeError(
+                f"term map {t!r} was not pre-registered; tracing must be "
+                "side-effect free — build the RDFizer over a DIS that "
+                "contains this map")
+        return tmpl, col, self._null_ok(col)
+
+    def _selection_mask(self, tm: TripleMap, table: Table) -> jax.Array:
+        """σ mask of the map's explicit selections over ``table`` (which may
+        be the source relation or a join output carrying its attrs)."""
+        mask = jnp.ones((table.capacity,), dtype=bool)
+        for sel in tm.selections:
+            col = table.column(sel.attr)
+            if sel.op == "notnull":
+                if self.dis.null_code is not None:
+                    mask &= col != jnp.int32(self.dis.null_code)
+            elif sel.op == "eq":
+                mask &= col == jnp.int32(self._code(self._sel, sel.value,
+                                                    "selection value"))
+            else:
+                mask &= col != jnp.int32(self._code(self._sel, sel.value,
+                                                    "selection value"))
+        return mask
 
     def _block(self, s_t: int, s_v: jax.Array, p: int, o_t: int,
                o_v: jax.Array, mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -131,15 +174,20 @@ class RDFizer:
         ], axis=1)
         return data, mask
 
-    def eval_map(self, tm: TripleMap, sources: Dict[str, Table]) -> Table:
-        """All triples produced by one triple map (bag semantics)."""
-        table = sources[tm.source]
+    def emit_triples(self, tm: TripleMap, table: Table,
+                     joins: Dict[int, Table]) -> Table:
+        """All triples of one map (bag semantics). ``table`` is the map's
+        relation; ``joins[i]`` is the pre-joined table for join POM ``i``
+        (child attrs + ``__ps`` = parent subject)."""
         s_t = self._subject_tmpl[tm.name]
-        s_v = table.column(tm.subject.attr) if tm.subject.attr else None
-        if s_v is None:  # constant subject (legal but unusual)
-            code = self.dis.vocab.intern(tm.subject.constant)
+        if tm.subject.attr:
+            s_v = table.column(tm.subject.attr)
+        else:  # constant subject (legal but unusual)
+            code = self._code(self._subj_const, tm.subject.constant,
+                              "subject constant")
             s_v = jnp.full((table.capacity,), jnp.int32(code))
-        s_ok = table.valid_mask & self._null_ok(s_v)
+        s_ok = table.valid_mask & self._null_ok(s_v) & \
+            self._selection_mask(tm, table)
 
         blocks: List[Tuple[jax.Array, jax.Array]] = []
         if tm.subject_class:
@@ -151,7 +199,25 @@ class RDFizer:
         for i, pom in enumerate(tm.poms):
             p_code = self._pred[pom.predicate]
             if isinstance(pom.object, RefObjectMap):
-                blocks.append(self._join_block(tm, i, pom, p_code, sources))
+                joined = joins[i]
+                parent_tm = self.dis.map_by_name(pom.object.parent_map)
+                if tm.subject.attr:
+                    s_vj = joined.column(tm.subject.attr)
+                else:  # constant child subject
+                    s_vj = jnp.full((joined.capacity,), jnp.int32(self._code(
+                        self._subj_const, tm.subject.constant,
+                        "subject constant")))
+                if parent_tm.subject.attr:
+                    o_v = joined.column("__ps")
+                else:  # constant parent subject (not carried by the ⋈)
+                    o_v = jnp.full((joined.capacity,), jnp.int32(self._code(
+                        self._subj_const, parent_tm.subject.constant,
+                        "subject constant")))
+                mask = joined.valid_mask & self._null_ok(s_vj) & \
+                    self._null_ok(o_v) & self._selection_mask(tm, joined)
+                blocks.append(self._block(
+                    s_t, s_vj, p_code, self._subject_tmpl[parent_tm.name],
+                    o_v, mask))
             else:
                 o_t, o_v, o_ok = self._term_cols(pom.object, table)
                 blocks.append(self._block(s_t, s_v, p_code, o_t, o_v,
@@ -164,25 +230,28 @@ class RDFizer:
         data, count = compact(data, mask)
         return Table(data=data, count=count, attrs=TRIPLE_ATTRS)
 
-    def _join_block(self, tm: TripleMap, pom_idx: int, pom, p_code: int,
-                    sources: Dict[str, Table]):
-        rom: RefObjectMap = pom.object
-        parent_tm = self.dis.map_by_name(rom.parent_map)
-        child = sources[tm.source]
-        parent = sources[parent_tm.source]
-        # pull only what the join needs from the parent, under reserved names
-        parent_proj = project_as(parent, [
-            (parent_tm.subject.attr, "__ps"), (rom.parent_attr, "__pk")])
-        cap = self.join_caps.get((tm.name, pom_idx),
-                                 _round_cap(child.capacity * 4))
-        joined, _total = equi_join(child, parent_proj, rom.child_attr,
-                                   "__pk", out_capacity=cap)
-        s_v = joined.column(tm.subject.attr)
-        o_v = joined.column("__ps")
-        s_t = self._subject_tmpl[tm.name]
-        o_t = self._subject_tmpl[parent_tm.name]
-        mask = joined.valid_mask & self._null_ok(s_v) & self._null_ok(o_v)
-        return self._block(s_t, s_v, p_code, o_t, o_v, mask)
+    # -- plan construction ---------------------------------------------------
+    def _build_plan(self):
+        if self._plan_caps is None:
+            from repro.plan import lower
+            plan = lower(self.dis)
+            caps = {}
+            for tm in plan.maps:
+                for i, pom in enumerate(tm.poms):
+                    if isinstance(pom.object, RefObjectMap):
+                        node = plan.join_node(tm, i)
+                        cap = self.join_caps.get((tm.name, i))
+                        if cap is not None:
+                            caps[node] = cap
+            self._plan_caps = (plan, caps)
+        return self._plan_caps
+
+    def eval_map(self, tm: TripleMap, sources: Dict[str, Table]) -> Table:
+        """All triples produced by one triple map (bag semantics)."""
+        from repro.plan.compile import execute_node
+        plan, caps = self._build_plan()
+        return execute_node(plan.emit_node(tm), sources, {}, emitter=self,
+                            dedup=self.dedup, caps=caps)
 
     def __call__(self, sources: Optional[Dict[str, Table]] = None
                  ) -> Tuple[Table, jax.Array]:
@@ -192,24 +261,20 @@ class RDFizer:
         the quantity the paper's motivating example blames (2,049,442,714
         raw vs 102,549 distinct).
         """
+        from repro.plan.compile import compile_plan
+        if self._compiled is None:
+            plan, caps = self._build_plan()
+            self._compiled = compile_plan(plan, self, engine=self.engine,
+                                          dedup=self.dedup, caps=caps)
         sources = self.dis.sources if sources is None else sources
-        per_map = [self.eval_map(tm, sources) for tm in self.dis.maps]
-        if self.engine == "sdm":
-            per_map = [distinct(t, dedup=self.dedup) for t in per_map]
-        raw = jnp.sum(jnp.stack([t.count for t in per_map]))
-        data = jnp.concatenate([t.data for t in per_map], axis=0)
-        mask = jnp.concatenate([t.valid_mask for t in per_map])
-        data, count = compact(data, mask)
-        kg = distinct(Table(data=data, count=count, attrs=TRIPLE_ATTRS),
-                      dedup=self.dedup)
-        return kg, raw
+        return self._compiled(sources)
 
 
 def rdfize(dis: DIS, engine: Engine = "rmlmapper",
            dedup: Optional[str] = None) -> Tuple[Table, int]:
     """Eager convenience wrapper: ``RDFize(DIS)`` -> (KG, raw count)."""
     kg, raw = RDFizer(dis, engine, dedup=dedup)()
-    return kg, int(raw)
+    return kg, host_int(raw)
 
 
 # -- host-side sink (strings only at the edge) -------------------------------

@@ -30,8 +30,8 @@ from typing import Dict, List, Mapping, Optional, Sequence
 
 from repro.relalg import Table, Vocab
 
-from .schema import (DIS, PredicateObjectMap, RefObjectMap, TermMap,
-                     TripleMap)
+from .schema import (DIS, PredicateObjectMap, RefObjectMap, Selection,
+                     TermMap, TripleMap)
 
 _TEMPLATE_VAR = re.compile(r"\{([^{}]+)\}")
 
@@ -52,6 +52,16 @@ def parse_term_map(obj: Mapping) -> TermMap:
     raise ValueError(f"cannot parse term map {obj!r}")
 
 
+def parse_selection(obj: Mapping) -> Selection:
+    if "eq" in obj:
+        return Selection(attr=obj["attr"], op="eq", value=obj["eq"])
+    if "neq" in obj:
+        return Selection(attr=obj["attr"], op="neq", value=obj["neq"])
+    if obj.get("notnull"):
+        return Selection(attr=obj["attr"], op="notnull")
+    raise ValueError(f"cannot parse selection {obj!r}")
+
+
 def parse_triple_map(obj: Mapping) -> TripleMap:
     subj_obj = dict(obj["subject"])
     subject_class = subj_obj.pop("class", None)
@@ -65,8 +75,10 @@ def parse_triple_map(obj: Mapping) -> TripleMap:
         else:
             o = parse_term_map(pom["object"])
         poms.append(PredicateObjectMap(predicate=pom["predicate"], object=o))
+    selections = tuple(parse_selection(s) for s in obj.get("selections", ()))
     return TripleMap(name=obj["name"], source=obj["source"], subject=subject,
-                     subject_class=subject_class, poms=tuple(poms))
+                     subject_class=subject_class, poms=tuple(poms),
+                     selections=selections)
 
 
 def parse_dis(obj: Mapping, vocab: Optional[Vocab] = None,
@@ -84,13 +96,16 @@ def parse_dis(obj: Mapping, vocab: Optional[Vocab] = None,
         rec.get(a) is None for src in obj["sources"].values()
         for rec in src.get("records", []) for a in src["attrs"]) else None
     dis = DIS(sources=sources, maps=maps, vocab=vocab, null_code=null_code)
-    # pre-register templates deterministically
+    # pre-register templates and σ comparison codes deterministically
     for m in maps:
         if m.subject.kind == "template":
             dis.template_id(m.subject.template)
         for p in m.poms:
             if isinstance(p.object, TermMap) and p.object.kind == "template":
                 dis.template_id(p.object.template)
+        for sel in m.selections:
+            if sel.op in ("eq", "neq"):
+                vocab.intern(sel.value)
     return dis
 
 
@@ -122,7 +137,12 @@ def triple_map_to_json(m: TripleMap) -> Dict:
         else:
             obj = term_map_to_json(p.object)
         poms.append({"predicate": p.predicate, "object": obj})
-    return {"name": m.name, "source": m.source, "subject": subj, "poms": poms}
+    out = {"name": m.name, "source": m.source, "subject": subj, "poms": poms}
+    if m.selections:
+        out["selections"] = [
+            {"attr": s.attr, "notnull": True} if s.op == "notnull"
+            else {"attr": s.attr, s.op: s.value} for s in m.selections]
+    return out
 
 
 def dump_maps(maps: Sequence[TripleMap]) -> str:

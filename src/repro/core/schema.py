@@ -34,6 +34,15 @@ RDF_TYPE = "rdf:type"
 TRIPLE_ATTRS = ("s_t", "s_v", "p", "o_t", "o_v")
 
 
+def map_by_name(maps, name: str) -> "TripleMap":
+    """Look a triple map up by name in any map collection (shared by DIS
+    and the planner's LogicalPlan)."""
+    for m in maps:
+        if m.name == name:
+            return m
+    raise KeyError(f"no triple map named {name!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class TermMap:
     """rr:subjectMap / rr:objectMap — one of reference/template/constant."""
@@ -75,6 +84,23 @@ class RefObjectMap:
 
 
 @dataclasses.dataclass(frozen=True)
+class Selection:
+    """σ predicate on a map's logical source (the paper's selection of
+    relevant entries). Filters every triple the map emits, including rows it
+    contributes to joins as a parent."""
+
+    attr: str
+    op: str                          # 'eq' | 'neq' | 'notnull'
+    value: Optional[object] = None   # for eq/neq; interned via the vocab
+
+    def __post_init__(self):
+        if self.op not in ("eq", "neq", "notnull"):
+            raise ValueError(f"bad Selection op {self.op!r}")
+        if self.op in ("eq", "neq") and self.value is None:
+            raise ValueError(f"{self.op} Selection needs a value")
+
+
+@dataclasses.dataclass(frozen=True)
 class PredicateObjectMap:
     predicate: str
     object: Union[TermMap, RefObjectMap]
@@ -93,6 +119,7 @@ class TripleMap:
     subject: TermMap
     subject_class: Optional[str] = None   # rr:class -> (s, rdf:type, class)
     poms: Tuple[PredicateObjectMap, ...] = ()
+    selections: Tuple[Selection, ...] = ()  # σ over the logical source
 
     @property
     def join_poms(self) -> List[PredicateObjectMap]:
@@ -128,10 +155,7 @@ class DIS:
         return tid
 
     def map_by_name(self, name: str) -> TripleMap:
-        for m in self.maps:
-            if m.name == name:
-                return m
-        raise KeyError(f"no triple map named {name!r}")
+        return map_by_name(self.maps, name)
 
     # -- unified schema O ---------------------------------------------------
     def classes(self) -> List[str]:

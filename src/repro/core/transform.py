@@ -14,34 +14,36 @@ semantification engine:
   referenced attrs under canonical role names, union, dedup; the maps
   collapse into one.
 
-After each rewrite the new sources are **materialized and shrunk to fit**
-(host sync), mirroring the paper's pre-processed files (its Table 1 reports
-exactly these reduced sizes).
+Two fixpoint drivers share that rule set:
+
+* :func:`apply_mapsdi` (the default) plans **symbolically**: the DIS is
+  lowered to the logical IR (:mod:`repro.plan`), Rules 1–3 + selection
+  pushdown + CSE run as pure rewrites with ZERO device work and zero host
+  syncs, and the final plan is materialized once — one jitted evaluation
+  with shared subplans computed once, then one ``shrink_to_fit`` per new
+  source. This is the paper's "until a fixed point over S' and M'" loop
+  without ever materializing an intermediate state.
+* :func:`apply_mapsdi_eager` is the historical driver: each rewrite
+  materializes + shrinks its sources (host sync) every iteration. It is
+  kept as the benchmark baseline (``benchmarks/planner.py``) and as an
+  independent oracle for the planner's property tests.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Set, Tuple
 
-import numpy as np
-
-from repro.relalg import Table, distinct, project_as, union
+from repro.relalg import Table, distinct, project_as, round_cap, \
+    shrink_to_fit, union
+from repro.relalg.guard import host_int
 
 from .analyze import (merge_groups, referenced_attrs, sorted_reference_poms)
-from .schema import (DIS, PredicateObjectMap, RefObjectMap, TermMap,
-                     TripleMap)
+from .schema import DIS, PredicateObjectMap, RefObjectMap, TripleMap
 
-
-def _round_cap(n: int, mult: int = 8) -> int:
-    return max(mult, ((int(n) + mult - 1) // mult) * mult)
-
-
-def shrink_to_fit(table: Table, mult: int = 8) -> Table:
-    """Materialize a table at capacity == round_up(count) (host sync)."""
-    n = int(table.count)
-    cap = _round_cap(n, mult)
-    data = np.asarray(table.data)[:n]
-    return Table.from_codes(data, table.attrs, cap)
+__all__ = [
+    "TransformStats", "apply_mapsdi", "apply_mapsdi_eager", "apply_merge",
+    "apply_projection", "plan_mapsdi", "round_cap", "shrink_to_fit",
+]
 
 
 @dataclasses.dataclass
@@ -49,12 +51,14 @@ class TransformStats:
     rule1_applications: int = 0
     rule2_applications: int = 0
     rule3_merges: int = 0
+    sigma_pushdowns: int = 0
+    cse_shared_subplans: int = 0
     source_rows_before: Dict[str, int] = dataclasses.field(default_factory=dict)
     source_rows_after: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
-# Rules 1 & 2: projection (+dedup) pushdown
+# Rules 1 & 2: projection (+dedup) pushdown (eager form)
 # ---------------------------------------------------------------------------
 
 def apply_projection(dis: DIS, stats: Optional[TransformStats] = None,
@@ -97,7 +101,7 @@ def apply_projection(dis: DIS, stats: Optional[TransformStats] = None,
 
 
 # ---------------------------------------------------------------------------
-# Rule 3: merging sources with equivalent attributes
+# Rule 3: merging sources with equivalent attributes (eager form)
 # ---------------------------------------------------------------------------
 
 def _join_parents(dis: DIS) -> Set[str]:
@@ -110,8 +114,8 @@ def apply_merge(dis: DIS, stats: Optional[TransformStats] = None,
     """Rule 3 on every mergeable group. Maps that serve as join parents are
     conservatively kept separate (their names are referenced by other maps).
     Canonical role attrs are ``__m0`` (subject) and ``__m{i}`` for the i-th
-    (predicate-sorted) object reference. ``dedup`` picks the δ strategy for
-    the merged-source set-union."""
+    (predicate-sorted) non-constant object reference. ``dedup`` picks the
+    δ strategy for the merged-source set-union."""
     parents = _join_parents(dis)
     out = dis.copy()
     merged_any = False
@@ -120,21 +124,18 @@ def apply_merge(dis: DIS, stats: Optional[TransformStats] = None,
         if len(group) < 2:
             continue
         lead = group[0]
-        roles: List[Tuple[str, str]] = []  # (role_name, lead attr) template
-        if lead.subject.referenced_attr:
-            roles.append(("__m0", "subject"))
-        ref_poms_lead = sorted_reference_poms(lead)
         canon_poms: List[PredicateObjectMap] = []
-        for r, (idx, term) in enumerate(ref_poms_lead):
+        r_nonconst = 0
+        for idx, term in sorted_reference_poms(lead):
             pom = lead.poms[idx]
             if term.kind == "constant":
                 canon_poms.append(pom)
             else:
-                role = f"__m{r + 1}"
-                roles.append((role, f"pom{r}"))
+                r_nonconst += 1
                 canon_poms.append(PredicateObjectMap(
                     predicate=pom.predicate,
-                    object=dataclasses.replace(term, attr=role)))
+                    object=dataclasses.replace(term,
+                                               attr=f"__m{r_nonconst}")))
 
         # project every member source to the role schema, union + dedup
         merged: Optional[Table] = None
@@ -142,13 +143,12 @@ def apply_merge(dis: DIS, stats: Optional[TransformStats] = None,
             spec: List[Tuple[str, str]] = []
             if tm.subject.referenced_attr:
                 spec.append((tm.subject.referenced_attr, "__m0"))
-            ref_poms = sorted_reference_poms(tm)
             r_nonconst = 0
-            for idx, term in ref_poms:
+            for idx, term in sorted_reference_poms(tm):
                 if term.kind == "constant":
                     continue
-                spec.append((term.attr, f"__m{r_nonconst + 1}"))
                 r_nonconst += 1
+                spec.append((term.attr, f"__m{r_nonconst}"))
             part = project_as(dis.sources[tm.source], spec)
             merged = part if merged is None else union(merged, part)
         assert merged is not None
@@ -179,26 +179,64 @@ def apply_merge(dis: DIS, stats: Optional[TransformStats] = None,
 
 
 # ---------------------------------------------------------------------------
-# fixpoint driver
+# fixpoint drivers
 # ---------------------------------------------------------------------------
 
 def _dis_signature(dis: DIS) -> Tuple:
     from .rml import triple_map_to_json
     maps_sig = tuple(sorted(str(triple_map_to_json(m)) for m in dis.maps))
-    src_sig = tuple(sorted((k, v.attrs, v.capacity, int(v.count))
+    src_sig = tuple(sorted((k, v.attrs, v.capacity, host_int(v.count))
                            for k, v in dis.sources.items()))
     return maps_sig, src_sig
+
+
+def plan_mapsdi(dis: DIS, max_iters: int = 8,
+                stats: Optional[TransformStats] = None):
+    """Symbolic fixpoint: lower the DIS and run the optimizer (Rules 1–3 +
+    σ pushdown + CSE) to convergence. Pure host-side rewriting — no device
+    work, no host syncs (tests run this under ``forbid_transfers``).
+    Returns the optimized :class:`~repro.plan.lower.LogicalPlan`."""
+    from repro.plan.lower import lower
+    from repro.plan.optimize import optimize
+    plan = lower(dis)
+    pstats = optimize(plan, max_iters=max_iters)
+    if stats is not None:
+        stats.rule1_applications += pstats.rule1_applications
+        stats.rule2_applications += pstats.rule2_applications
+        stats.rule3_merges += pstats.rule3_merges
+        stats.sigma_pushdowns += pstats.sigma_pushdowns
+        stats.cse_shared_subplans += pstats.cse_shared_subplans
+    return plan
 
 
 def apply_mapsdi(dis: DIS, max_iters: int = 8,
                  stats: Optional[TransformStats] = None,
                  dedup: Optional[str] = None
                  ) -> Tuple[DIS, TransformStats]:
-    """Rules 1–3 to a fixpoint (the paper applies them "until a fixed point
-    over S' and M' is reached"). ``dedup`` picks the δ strategy used by
-    every rule application."""
+    """Rules 1–3 (+ σ pushdown, CSE) to a fixpoint, planner-backed: the
+    fixpoint runs entirely on the symbolic plan and the result is
+    materialized once at the end. ``dedup`` picks the δ strategy used by
+    the single materialization."""
+    from repro.plan.compile import materialize_plan
     stats = stats or TransformStats()
-    stats.source_rows_before = {k: int(v.count) for k, v in dis.sources.items()}
+    plan = plan_mapsdi(dis, max_iters=max_iters, stats=stats)
+    out, rows_after = materialize_plan(plan, dedup=dedup)
+    stats.source_rows_before = {k: host_int(v.count)
+                                for k, v in dis.sources.items()}
+    stats.source_rows_after = rows_after
+    return out, stats
+
+
+def apply_mapsdi_eager(dis: DIS, max_iters: int = 8,
+                       stats: Optional[TransformStats] = None,
+                       dedup: Optional[str] = None
+                       ) -> Tuple[DIS, TransformStats]:
+    """The historical materializing fixpoint: every iteration rewrites and
+    shrinks sources on device with host syncs in between. Baseline for
+    ``benchmarks/planner.py`` and oracle for the planner tests."""
+    stats = stats or TransformStats()
+    stats.source_rows_before = {k: host_int(v.count)
+                                for k, v in dis.sources.items()}
     cur = dis
     prev_sig = None
     for _ in range(max_iters):
@@ -208,5 +246,6 @@ def apply_mapsdi(dis: DIS, max_iters: int = 8,
         if sig == prev_sig:
             break
         prev_sig = sig
-    stats.source_rows_after = {k: int(v.count) for k, v in cur.sources.items()}
+    stats.source_rows_after = {k: host_int(v.count)
+                               for k, v in cur.sources.items()}
     return cur, stats

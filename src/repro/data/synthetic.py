@@ -11,11 +11,19 @@ w.r.t. the projected attributes (25/50/75%).
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro.core import DIS, parse_dis
+
+
+def _stable_hash(s: str) -> int:
+    """Process-independent hash (builtin ``hash`` is salted per process,
+    which made generated KGs — and committed benchmark artifacts —
+    irreproducible across runs)."""
+    return zlib.crc32(s.encode())
 
 
 # ---------------------------------------------------------------------------
@@ -156,11 +164,11 @@ def make_group_b_dis(n_rows: int, redundancy: float = 0.75, seed: int = 0,
     left = [{"ID": int(i), "Genename": str(g),
              "HGNC": int(rng.integers(1, 20000)),
              "enst": f"ENST{rng.integers(0, 10**8):08d}",
-             "Biotype": str(bios[hash(g) % len(bios)])}
+             "Biotype": str(bios[_stable_hash(g) % len(bios)])}
             for i, g in enumerate(gene_of_row)]
     gene_of_row_r = genes[rng.integers(0, n_genes, size=n_rows)]
     right = [{"ID": int(i), "Genename": str(g),
-              "Chromosome": str(chroms[hash(g) % len(chroms)]),
+              "Chromosome": str(chroms[_stable_hash(g) % len(chroms)]),
               "Sample": f"S{rng.integers(0, 10**6):06d}"}
              for i, g in enumerate(gene_of_row_r)]
 

@@ -1,0 +1,27 @@
+"""MapSDI logical-plan subsystem: IR, optimizing planner, compiler.
+
+The paper defines pre-processing as relational-algebra rewrites; this
+package makes that literal. ``lower`` turns a ``DIS`` into a logical plan
+DAG, ``optimize`` runs Rules 1–3 plus selection pushdown and common-subplan
+elimination as *symbolic* rewrites (zero device work), ``annotate`` sizes
+every buffer at plan time, and ``compile_plan`` lowers the optimized DAG to
+a single jitted ``sources -> (KG, raw)`` closure. See ``docs/planner.md``.
+"""
+from .ir import (Distinct, EmitTriples, EquiJoin, Node, Pred, Project, Scan,
+                 Select, Union, intern, iter_nodes, make_select, tree_size)
+from .lower import LogicalPlan, lower, selection_preds
+from .optimize import (PlanStats, cse, merge_maps, optimize,
+                       push_projections, push_selections)
+from .annotate import annotate
+from .compile import (compile_plan, execute_node, input_names,
+                      materialize_plan)
+from .explain import dump_plan, explain
+
+__all__ = [
+    "Distinct", "EmitTriples", "EquiJoin", "LogicalPlan", "Node",
+    "PlanStats", "Pred", "Project", "Scan", "Select", "Union", "annotate",
+    "compile_plan", "cse", "dump_plan", "execute_node", "explain",
+    "input_names", "intern", "iter_nodes", "lower", "make_select",
+    "materialize_plan", "merge_maps", "optimize", "push_projections",
+    "push_selections", "selection_preds", "tree_size",
+]

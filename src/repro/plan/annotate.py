@@ -1,0 +1,123 @@
+"""Plan-time cardinality annotation — ``plan_join_caps`` generalized to a
+per-node capacity on the whole IR.
+
+``annotate(plan)`` evaluates every *relation* node of the optimized DAG on
+the host (numpy, exact — the planning-time analogue of a cardinality
+estimator with perfect statistics) and returns ``(counts, caps)``:
+
+* ``counts[node]`` — exact valid-row count of the node's output for the
+  planning-time source extensions (``EquiJoin`` nodes get their exact match
+  total, the quantity ``plan_join_caps`` computed per (map, pom)).
+* ``caps[node]``   — ``round_cap(count)``, the static buffer capacity the
+  compiler sizes that node's output with.
+
+This is the only place the planned pipeline reads source data before
+execution: one host materialization per scanned source, all downstream
+arithmetic in numpy. Capacities are exact for the planning extension; like
+join caps before, re-running the compiled closure on *larger* extensions is
+the caller's overflow risk.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.relalg.table import round_cap
+
+from .ir import (Distinct, EmitTriples, EquiJoin, Node, Project, Scan,
+                 Select, Union)
+from .lower import LogicalPlan
+
+Rows = Tuple[np.ndarray, Tuple[str, ...]]  # valid rows [n, k] + attr names
+
+
+def _eval_rows(node: Node, plan: LogicalPlan,
+               memo: Dict[Node, Rows]) -> Rows:
+    hit = memo.get(node)
+    if hit is not None:
+        return hit
+    if isinstance(node, Scan):
+        table = plan.dis.sources[node.source]
+        rows: np.ndarray = table.to_codes()
+        attrs = tuple(table.attrs)
+    elif isinstance(node, Project):
+        child, cattrs = _eval_rows(node.child, plan, memo)
+        idx = [cattrs.index(a) for a, _ in node.spec]
+        rows, attrs = child[:, idx], node.attrs
+    elif isinstance(node, Select):
+        child, cattrs = _eval_rows(node.child, plan, memo)
+        keep = np.ones(len(child), dtype=bool)
+        for p in node.preds:
+            col = child[:, cattrs.index(p.attr)]
+            if p.op == "eq":
+                keep &= col == p.code
+            else:  # 'neq' and 'notnull' both exclude one code
+                keep &= col != p.code
+        rows, attrs = child[keep], cattrs
+    elif isinstance(node, Distinct):
+        child, cattrs = _eval_rows(node.child, plan, memo)
+        rows, attrs = np.unique(child, axis=0), cattrs
+    elif isinstance(node, Union):
+        parts: List[np.ndarray] = []
+        attrs = node.attrs
+        for c in node.inputs:
+            crows, cattrs = _eval_rows(c, plan, memo)
+            parts.append(crows[:, [cattrs.index(a) for a in attrs]])
+        rows = np.concatenate(parts, axis=0)
+    else:
+        raise TypeError(f"not a relation node: {type(node).__name__}")
+    memo[node] = (rows, attrs)
+    return rows, attrs
+
+
+def join_match_total(lk: np.ndarray, rk: np.ndarray) -> int:
+    """Exact equi-join output cardinality for two key columns — the
+    estimation kernel shared with ``plan_join_caps``."""
+    vals, counts = np.unique(rk, return_counts=True)
+    if len(vals) == 0 or len(lk) == 0:
+        return 0
+    idx = np.clip(np.searchsorted(vals, lk), 0, len(vals) - 1)
+    match = vals[idx] == lk
+    return int(counts[idx][match].sum())
+
+
+def _join_total(node: EquiJoin, plan: LogicalPlan,
+                memo: Dict[Node, Rows]) -> int:
+    left, lattrs = _eval_rows(node.left, plan, memo)
+    right, rattrs = _eval_rows(node.right, plan, memo)
+    return join_match_total(left[:, lattrs.index(node.left_key)],
+                            right[:, rattrs.index(node.right_key)])
+
+
+def annotate(plan: LogicalPlan
+             ) -> Tuple[Dict[Node, int], Dict[Node, int]]:
+    """Exact (counts, capacities) for every relation and join node reachable
+    from the plan's emits. One host read per scanned source."""
+    memo: Dict[Node, Rows] = {}
+    counts: Dict[Node, int] = {}
+    for emit in plan.emits():
+        assert isinstance(emit, EmitTriples)
+        for node in _relation_nodes(emit.input):
+            if node not in counts:
+                counts[node] = len(_eval_rows(node, plan, memo)[0])
+        for _, join in emit.joins:
+            for side in (join.left, join.right):
+                for node in _relation_nodes(side):
+                    if node not in counts:
+                        counts[node] = len(_eval_rows(node, plan, memo)[0])
+            if join not in counts:
+                counts[join] = _join_total(join, plan, memo)
+    caps = {node: round_cap(c) for node, c in counts.items()}
+    return counts, caps
+
+
+def _relation_nodes(root: Node):
+    stack, seen = [root], set()
+    while stack:
+        n = stack.pop()
+        if n in seen or isinstance(n, (EquiJoin, EmitTriples)):
+            continue
+        seen.add(n)
+        stack.extend(n.children())
+        yield n

@@ -18,6 +18,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from .encoding import PAD_ID, Vocab
+from .guard import host_get, host_int
+
+
+def round_cap(n: int, mult: int = 8) -> int:
+    """Round a row count up to a capacity multiple (minimum one multiple)."""
+    return max(mult, ((int(n) + mult - 1) // mult) * mult)
+
+
+def shrink_to_fit(table: "Table", mult: int = 8) -> "Table":
+    """Materialize a table at capacity == round_cap(count) (host sync)."""
+    n = host_int(table.count)
+    cap = round_cap(n, mult)
+    data = host_get(table.data)[:n]
+    return Table.from_codes(data, table.attrs, cap)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -96,8 +110,8 @@ class Table:
 
     # -- host-side views (tests / sinks only) ---------------------------------
     def to_codes(self) -> np.ndarray:
-        n = int(self.count)
-        return np.asarray(self.data)[:n]
+        n = host_int(self.count)
+        return host_get(self.data)[:n]
 
     def to_records(self, vocab: Vocab) -> List[Dict[str, object]]:
         return [

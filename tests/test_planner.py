@@ -1,0 +1,358 @@
+"""Planner tests: plan correctness (planned == eager == raw, bit-identical),
+sync-free symbolic fixpoint, selection pushdown, CSE, capacity annotation.
+
+The hypothesis-based property sweep lives in ``test_planner_properties.py``
+(skipped without the test extra); this file keeps a seeded random-DIS sweep
+so the same invariants are exercised in every environment.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (apply_mapsdi, apply_mapsdi_eager, parse_dis, rdfize)
+from repro.core.pipeline import make_planned_fn, mapsdi_create_kg
+from repro.core.transform import _dis_signature, plan_mapsdi
+from repro.plan import (Distinct, Scan, Select, annotate, dump_plan, explain,
+                        iter_nodes, lower, optimize)
+from repro.relalg import forbid_transfers
+
+
+# ---------------------------------------------------------------------------
+# seeded random DIS generator (joins, nulls, selections, duplicates)
+# ---------------------------------------------------------------------------
+
+def random_dis_spec(seed: int, with_nulls: bool = True,
+                    with_selections: bool = True) -> dict:
+    rng = np.random.default_rng(seed)
+    values = ["a", "b", "c", "d", "e"]
+    n_sources = int(rng.integers(1, 4))
+    sources, src_attrs = {}, {}
+    for si in range(n_sources):
+        attrs = [f"x{si}_{k}" for k in range(int(rng.integers(1, 5)))]
+        n_rows = int(rng.integers(0, 13))
+        records = []
+        for _ in range(n_rows):
+            rec = {}
+            for a in attrs:
+                if with_nulls and rng.random() < 0.2:
+                    rec[a] = None
+                else:
+                    rec[a] = values[int(rng.integers(0, len(values)))]
+            records.append(rec)
+        sources[f"s{si}"] = {"attrs": attrs, "records": records}
+        src_attrs[f"s{si}"] = attrs
+
+    maps = []
+    for mi in range(int(rng.integers(1, 4))):
+        src = sorted(sources)[int(rng.integers(0, len(sources)))]
+        attrs = src_attrs[src]
+        subj_attr = attrs[int(rng.integers(0, len(attrs)))]
+        tmpl = ["http://ex/T/{%s}" % subj_attr,
+                "http://ex/Shared/{%s}" % subj_attr][int(rng.integers(0, 2))]
+        subj = {"template": tmpl}
+        if rng.random() < 0.5:
+            subj["class"] = ["ex:C1", "ex:C2"][int(rng.integers(0, 2))]
+        poms = []
+        for _ in range(int(rng.integers(0, 4))):
+            kind = ["reference", "constant", "template"][
+                int(rng.integers(0, 3))]
+            pred = ["ex:p1", "ex:p2", "ex:p3"][int(rng.integers(0, 3))]
+            if kind == "reference":
+                obj = {"reference": attrs[int(rng.integers(0, len(attrs)))]}
+            elif kind == "constant":
+                obj = {"constant": ["ex:k1", "ex:k2"][int(rng.integers(0, 2))]}
+            else:
+                obj = {"template": "http://ex/O/{%s}" %
+                       attrs[int(rng.integers(0, len(attrs)))]}
+            poms.append({"predicate": pred, "object": obj})
+        m = {"name": f"m{mi}", "source": src, "subject": subj, "poms": poms}
+        if with_selections and rng.random() < 0.3:
+            attr = attrs[int(rng.integers(0, len(attrs)))]
+            if rng.random() < 0.5:
+                m["selections"] = [{"attr": attr, "eq": values[
+                    int(rng.integers(0, len(values)))]}]
+            else:
+                m["selections"] = [{"attr": attr, "notnull": True}]
+        maps.append(m)
+
+    if len(maps) >= 2 and rng.random() < 0.5:
+        child, parent = maps[-1], maps[0]
+        if parent["name"] != child["name"]:
+            ca = src_attrs[child["source"]]
+            pa = src_attrs[parent["source"]]
+            child["poms"] = child["poms"] + [{
+                "predicate": "ex:join",
+                "object": {"parentTriplesMap": parent["name"],
+                           "joinCondition": {
+                               "child": ca[int(rng.integers(0, len(ca)))],
+                               "parent": pa[int(rng.integers(0, len(pa)))]}}}]
+    return {"sources": sources, "maps": maps}
+
+
+# ---------------------------------------------------------------------------
+# planned == eager == raw, bit-identically, across engines and δ strategies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(12))
+def test_planned_pipeline_bit_identical_to_rdfize(seed):
+    """execute(optimize(lower(dis))) == rdfize(dis), bit for bit."""
+    spec = random_dis_spec(seed)
+    for engine in ("rmlmapper", "sdm"):
+        for dedup in ("lex", "hash"):
+            dis = parse_dis(spec)
+            kg0, raw0 = rdfize(dis, engine=engine, dedup=dedup)
+            fn, _plan = make_planned_fn(parse_dis(spec), engine=engine,
+                                        dedup=dedup)
+            kg1, raw1 = fn(parse_dis(spec).sources)
+            np.testing.assert_array_equal(kg1.to_codes(), kg0.to_codes())
+            assert int(raw1) <= raw0
+
+
+@pytest.mark.parametrize("seed", range(12, 20))
+def test_planned_apply_mapsdi_matches_eager(seed):
+    """The planner-backed apply_mapsdi and the historical materializing
+    fixpoint yield the same KG (and the planner never yields more rows)."""
+    spec = random_dis_spec(seed)
+    kg0, _ = rdfize(parse_dis(spec))
+    dis_e, stats_e = apply_mapsdi_eager(parse_dis(spec))
+    dis_p, stats_p = apply_mapsdi(parse_dis(spec))
+    kg_e, _ = rdfize(dis_e)
+    kg_p, _ = rdfize(dis_p)
+    np.testing.assert_array_equal(kg_e.to_codes(), kg0.to_codes())
+    np.testing.assert_array_equal(kg_p.to_codes(), kg0.to_codes())
+    assert sum(stats_p.source_rows_after.values()) <= \
+        sum(stats_e.source_rows_after.values())
+    assert stats_p.rule3_merges == stats_e.rule3_merges
+
+
+def test_planned_apply_mapsdi_idempotent():
+    spec = random_dis_spec(3)
+    dis2, _ = apply_mapsdi(parse_dis(spec))
+    dis3, _ = apply_mapsdi(dis2)
+    assert _dis_signature(dis2) == _dis_signature(dis3)
+
+
+# ---------------------------------------------------------------------------
+# the fixpoint is symbolic: zero device↔host syncs until materialization
+# ---------------------------------------------------------------------------
+
+def test_fixpoint_performs_no_host_sync():
+    """Rules 1–3 + σ + CSE to fixpoint under a transfer guard: any
+    device→host materialization (implicit or instrumented) raises."""
+    from repro.data import make_group_b_dis
+    dis = make_group_b_dis(n_rows=200, redundancy=0.6, seed=7)
+    with forbid_transfers() as ledger:
+        plan = plan_mapsdi(dis)
+    assert ledger.device_to_host == 0
+    assert len(plan.maps) == 2
+
+
+def test_eager_fixpoint_does_sync():
+    """Sanity check the instrumentation: the eager driver ticks it."""
+    from repro.data import make_group_b_dis
+    from repro.relalg import count_transfers
+    dis = make_group_b_dis(n_rows=100, redundancy=0.6, seed=8)
+    with count_transfers() as ledger:
+        apply_mapsdi_eager(dis)
+    assert ledger.device_to_host > 0
+
+
+# ---------------------------------------------------------------------------
+# selection pushdown (σ) fires and is lossless
+# ---------------------------------------------------------------------------
+
+def _sigma_spec():
+    return {
+        "sources": {"s": {"attrs": ["a", "b", "c"], "records": [
+            {"a": "x1", "b": "u", "c": "HUMAN"},
+            {"a": None, "b": "v", "c": "HUMAN"},
+            {"a": "x2", "b": None, "c": "MOUSE"},
+            {"a": "x2", "b": "w", "c": "MOUSE"},
+            {"a": "x1", "b": "u", "c": "HUMAN"},
+        ]}},
+        "maps": [{"name": "m", "source": "s",
+                  "subject": {"template": "http://ex/T/{a}", "class": "ex:C"},
+                  "poms": [{"predicate": "ex:p", "object": {"reference": "b"}}],
+                  "selections": [{"attr": "c", "eq": "HUMAN"}]}],
+    }
+
+
+def test_selection_pushdown_fires_below_projection():
+    plan = lower(parse_dis(_sigma_spec()))
+    stats = optimize(plan)
+    assert stats.sigma_pushdowns >= 1
+    (node,) = plan.inputs.values()
+    # canonical shape: δ(π(σ(scan))) — σ sits on the scan, below π and δ
+    selects = [n for n in iter_nodes(node) if isinstance(n, Select)]
+    assert len(selects) == 1
+    assert isinstance(selects[0].child, Scan)
+    ops = {p.op for p in selects[0].preds}
+    assert ops == {"notnull", "eq"}  # null-filter AND constant-equality
+
+
+def test_selection_pushdown_shrinks_source_same_kg():
+    kg0, _ = rdfize(parse_dis(_sigma_spec()))
+    dis_e, _ = apply_mapsdi_eager(parse_dis(_sigma_spec()))
+    dis_p, _ = apply_mapsdi(parse_dis(_sigma_spec()))
+    (rows_e,) = [int(t.count) for t in dis_e.sources.values()]
+    (rows_p,) = [int(t.count) for t in dis_p.sources.values()]
+    assert rows_p < rows_e          # σ removed never-emitting rows
+    kg_p, _ = rdfize(dis_p)
+    np.testing.assert_array_equal(kg_p.to_codes(), kg0.to_codes())
+
+
+def test_selection_pushdown_skips_join_parent_object_filters():
+    """A join parent's object null-filter must NOT be pushed (its rows feed
+    child joins); its subject null-filter must be."""
+    spec = {
+        "sources": {
+            "g": {"attrs": ["k", "v"], "records": [
+                {"k": "k1", "v": None}, {"k": "k2", "v": "o"}]},
+            "h": {"attrs": ["k", "w"], "records": [
+                {"k": "k1", "w": "b1"}, {"k": "k2", "w": "b2"}]},
+        },
+        "maps": [
+            {"name": "parent", "source": "g",
+             "subject": {"template": "http://ex/P/{k}"},
+             "poms": [{"predicate": "ex:v", "object": {"reference": "v"}}]},
+            {"name": "child", "source": "h",
+             "subject": {"template": "http://ex/C/{w}"},
+             "poms": [{"predicate": "ex:j",
+                       "object": {"parentTriplesMap": "parent",
+                                  "joinCondition": {"child": "k",
+                                                    "parent": "k"}}}]},
+        ],
+    }
+    kg0, _ = rdfize(parse_dis(spec))
+    assert int(kg0.count) == 3  # 1 parent literal + 2 join triples
+    dis_p, _ = apply_mapsdi(parse_dis(spec))
+    kg_p, _ = rdfize(dis_p)
+    np.testing.assert_array_equal(kg_p.to_codes(), kg0.to_codes())
+    # the parent's pre-processed relation kept the null-v row
+    parent_src = dis_p.sources[dis_p.map_by_name("parent").source]
+    assert int(parent_src.count) == 2
+
+
+# ---------------------------------------------------------------------------
+# common-subplan elimination
+# ---------------------------------------------------------------------------
+
+def test_constant_subject_maps_join_both_sides():
+    """Constant-subject maps work as join child AND join parent (the old
+    _join_block crashed on ``column(None)``)."""
+    spec = {
+        "sources": {
+            "g": {"attrs": ["k"], "records": [{"k": "k1"}, {"k": "k2"}]},
+            "h": {"attrs": ["k"], "records": [{"k": "k1"}, {"k": "k1"}]},
+        },
+        "maps": [
+            {"name": "parent", "source": "g",
+             "subject": {"constant": "ex:P"}, "poms": []},
+            {"name": "child", "source": "h",
+             "subject": {"constant": "ex:C"},
+             "poms": [{"predicate": "ex:j",
+                       "object": {"parentTriplesMap": "parent",
+                                  "joinCondition": {"child": "k",
+                                                    "parent": "k"}}}]},
+        ],
+    }
+    kg0, raw0 = rdfize(parse_dis(spec))
+    assert raw0 == 2           # two k1 child rows match one parent row
+    assert int(kg0.count) == 1  # (ex:C, ex:j, ex:P), deduplicated
+    fn, _ = make_planned_fn(parse_dis(spec), engine="rmlmapper")
+    kg1, _ = fn(parse_dis(spec).sources)
+    np.testing.assert_array_equal(kg1.to_codes(), kg0.to_codes())
+
+
+def test_cse_shares_identical_projections_across_maps():
+    spec = {
+        "sources": {"s": {"attrs": ["a", "b"], "records": [
+            {"a": "x", "b": "y"}, {"a": "x", "b": "z"}]}},
+        "maps": [
+            {"name": "m0", "source": "s",
+             "subject": {"template": "http://ex/A/{a}"},
+             "poms": [{"predicate": "ex:p", "object": {"reference": "b"}}]},
+            {"name": "m1", "source": "s",
+             "subject": {"template": "http://ex/B/{a}"},  # different head
+             "poms": [{"predicate": "ex:q", "object": {"reference": "b"}}]},
+        ],
+    }
+    plan = lower(parse_dis(spec))
+    stats = optimize(plan)
+    assert plan.inputs["m0"] is plan.inputs["m1"]   # hash-consed, one node
+    assert stats.cse_shared_subplans > 0
+
+
+def test_cse_shares_join_parent_relation():
+    """The parent relation is one node feeding both the parent's own emit
+    and the child's ⋈ — shared subplans beyond (source, attrs) pairs."""
+    from repro.data import fig5_join_dis
+    plan = lower(fig5_join_dis())
+    optimize(plan)
+    child = plan.map_by_name("TripleMap1")
+    join = plan.join_node(child, 0)
+    # the ⋈ right side projects exactly the parent map's relation node
+    assert join.right.child is plan.inputs["TripleMap2"]
+
+
+# ---------------------------------------------------------------------------
+# capacity annotation + explain
+# ---------------------------------------------------------------------------
+
+def test_capacity_annotation_is_exact():
+    from repro.data import make_group_b_dis
+    dis = make_group_b_dis(n_rows=64, redundancy=0.5, seed=9)
+    plan = lower(dis)
+    optimize(plan)
+    counts, caps = annotate(plan)
+    dis2, _ = apply_mapsdi(make_group_b_dis(n_rows=64, redundancy=0.5,
+                                            seed=9))
+    for tm in plan.maps:
+        node = plan.inputs[tm.name]
+        materialized = dis2.sources[dis2.map_by_name(tm.name).source]
+        assert counts[node] == int(materialized.count)
+        assert caps[node] == materialized.capacity
+
+
+def test_explain_renders_tree_with_capacities():
+    from repro.data import make_group_a_dis
+    plan = lower(make_group_a_dis(n_rows=16, redundancy=0.5, seed=2))
+    optimize(plan)
+    text = explain(plan, "sdm")
+    assert "δ" in text and "π" in text and "scan" in text
+    assert "∪" in text          # Rule-3 merged union
+    assert "cap=" in text and "rows=" in text
+    assert "emit[TM_merged_0]" in text
+    # unannotated dump still renders
+    assert "scan" in dump_plan(plan)
+
+
+def test_tracing_is_side_effect_free():
+    """Satellite of the planner refactor: RDFizer.__init__ pre-interns
+    every constant; evaluating a map the engine was NOT built for raises
+    instead of silently interning mid-trace."""
+    import dataclasses
+    from repro.core import RDFizer, TermMap, PredicateObjectMap
+    spec = random_dis_spec(0, with_nulls=False, with_selections=False)
+    dis = parse_dis(spec)
+    rdfizer = RDFizer(dis)
+    vocab_len = len(dis.vocab)
+    kg, _ = rdfizer()
+    assert len(dis.vocab) == vocab_len   # tracing interned nothing
+    foreign = dataclasses.replace(
+        dis.maps[0],
+        poms=(PredicateObjectMap(
+            predicate=dis.maps[0].poms[0].predicate if dis.maps[0].poms
+            else "ex:p1",
+            object=TermMap(kind="constant", constant="ex:never-interned")),))
+    with pytest.raises(RuntimeError, match="not pre-interned"):
+        rdfizer.eval_map(foreign, dis.sources)
+
+
+def test_pipeline_stats_report_planner_counters():
+    from repro.data import make_group_a_dis
+    kg, stats = mapsdi_create_kg(make_group_a_dis(48, 0.5, seed=4))
+    assert stats["rule3"] == 1
+    assert stats["cse_shared"] >= 0
+    assert stats["kg_triples"] == int(kg.count)
+    assert sum(stats["source_rows_after"].values()) < \
+        sum(stats["source_rows_before"].values())
