@@ -5,7 +5,7 @@ and "Scaling Up KG Creation" locate the next order of magnitude in *planning*
 the evaluation rather than per-operator tricks. This group measures exactly
 that step: the historical eager driver (`apply_mapsdi_eager` — device
 rewrites with a host sync per source per fixpoint iteration, then the
-RDFizer closure) against the planner (`make_planned_fn` — symbolic fixpoint,
+RDFizer closure) against the planner (`KGEngine` — symbolic fixpoint,
 plan-time capacities, ONE jitted closure fusing pre-processing and
 semantification).
 
@@ -30,8 +30,8 @@ from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
+from repro.api import KGEngine
 from repro.core import RDFizer, apply_mapsdi_eager, parse_dis
-from repro.core.pipeline import make_planned_fn
 from repro.core.transform import plan_mapsdi
 from repro.data.synthetic import (FIG3_MAP, fig4_gene_source,
                                   make_group_a_dis, make_group_b_dis)
@@ -136,11 +136,11 @@ def _bench_planned(dis, engine: str, dedup: str, repeats: int
     with forbid_transfers() as ledger:
         plan_mapsdi(dis)
     t0 = time.perf_counter()
-    fn, _plan = make_planned_fn(dis, engine=engine, dedup=dedup)
+    session = KGEngine(dis, engine=engine, dedup=dedup)
     plan_s = time.perf_counter() - t0
 
     def run():
-        kg, _ = fn(dis.sources)
+        kg, _ = session.run()
         kg.data.block_until_ready()
         return kg
 

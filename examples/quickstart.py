@@ -1,21 +1,23 @@
-"""Quickstart: the paper's Fig. 3/4 example end-to-end in ~50 lines.
+"""Quickstart: the paper's Fig. 3/4 example end-to-end in ~60 lines.
 
 Builds the 9-row gene source, the RML triple map that uses 4 of its 8
-attributes, runs MapSDI (the planner pushes projection + dedup below
-semantification, then compiles everything to one jitted closure) and the
-traditional framework, prints the *logical plan* the optimizer produced
-(with per-node plan-time capacities), and both the N-Triples output and
-the work each framework did.
+attributes, runs MapSDI through the session API (``KGEngine`` plans once —
+Rules 1-3 + σ + CSE — and compiles one jitted closure) and the traditional
+framework, prints the *logical plan* the optimizer produced (with per-node
+plan-time capacities), ingests a source extension through the same session
+(cached closure, no re-plan), and shows both the N-Triples output and the
+work each framework did.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+from repro.api import KGEngine
 from repro.core import parse_dis
-from repro.core.pipeline import mapsdi_create_kg
 from repro.core.rdfizer import triples_to_ntriples
 from repro.core.tframework import t_framework_create_kg
 from repro.core.transform import plan_mapsdi
 from repro.data.synthetic import FIG3_MAP, fig4_gene_source
 from repro.plan import explain
+from repro.relalg import Table
 
 records, attrs = fig4_gene_source()
 dis = parse_dis({"sources": {"genes": {"attrs": attrs, "records": records}},
@@ -28,8 +30,9 @@ kg_t, stats_t = t_framework_create_kg(
 print(f"T-framework : {stats_t['raw_triples']} raw triples generated, "
       f"{stats_t['kg_triples']} after dedup")
 
-# --- MapSDI: plan (Rules 1-3 + σ + CSE, symbolic), then ONE closure -------
-kg_m, stats_m = mapsdi_create_kg(dis)
+# --- MapSDI session: plan once (Rules 1-3 + σ + CSE), then ONE closure ----
+engine = KGEngine(dis)
+kg_m, stats_m = engine.create_kg()
 rows_after = sum(stats_m['source_rows_after'].values())
 print(f"MapSDI      : {rows_after} source rows after Rule 1 "
       f"(from {sum(stats_m['source_rows_before'].values())}), "
@@ -37,11 +40,22 @@ print(f"MapSDI      : {rows_after} source rows after Rule 1 "
 
 assert kg_m.row_set() == kg_t.row_set(), "Q1: same knowledge graph"
 
+# --- incremental ingestion: the session reuses its compiled plan ----------
+new_gene = [{"ID": 10, "ENSG": "ENSG00000284733", "ENSGV": ".2",
+             "SYMBOL": "OR4F29", "SYMBOLV": "OR4F29-201",
+             "ENST": "ENST00000426406", "SPECIES": "HUMAN",
+             "ACC": "Q8NH21"}]
+kg_i, stats_i = engine.ingest(
+    {"genes": Table.from_records(new_gene, attrs, engine.vocab)})
+print(f"ingest      : +1 row -> {stats_i['kg_triples']} triples "
+      f"(recompiles={stats_i['recompiles']}, "
+      f"cache_hit={stats_i['plan_cache_hit']})")
+
 # --- inspect the optimized plan (dump_plan/explain) -----------------------
 print("\nOptimized logical plan (per-node plan-time rows/capacities):")
 plan = plan_mapsdi(dis)
 print(explain(plan, engine="sdm"))
 
 print("\nKnowledge graph (N-Triples):")
-for line in sorted(triples_to_ntriples(kg_m, dis)):
+for line in sorted(triples_to_ntriples(kg_i, dis)):
     print(" ", line)

@@ -1,0 +1,13 @@
+"""Public session API for MapSDI knowledge-graph creation.
+
+One front door: :class:`KGEngine` (cached plans, incremental ingestion,
+overflow-safe re-execution). The historical free functions in
+``repro.core.pipeline`` / ``repro.core.rdfizer`` are thin deprecated
+wrappers over this package. See ``docs/engine.md``.
+"""
+from .cache import (PLAN_CACHE, CachedPlan, PlanCache, clear_plan_cache,
+                    plan_cache_stats)
+from .engine import KGEngine
+
+__all__ = ["CachedPlan", "KGEngine", "PLAN_CACHE", "PlanCache",
+           "clear_plan_cache", "plan_cache_stats"]

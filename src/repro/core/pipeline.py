@@ -1,102 +1,89 @@
-"""End-to-end MapSDI pipeline: plan the DIS, then execute one closure.
+"""End-to-end MapSDI pipeline entry points — thin wrappers over the
+session API.
 
-``mapsdi_create_kg`` = the full framework of Fig. 2, planner-backed:
-extract knowledge from the mapping rules, run Rules 1–3 (+ σ pushdown +
-CSE) as symbolic rewrites, size every buffer at plan time, and lower the
-optimized DAG — pre-processing *and* semantification — to ONE jitted
-``sources -> (KG, raw)`` closure. No intermediate source is ever
-materialized; the only host work is planning.
+The one front door is :class:`repro.api.KGEngine` (cached plans,
+incremental ingestion, overflow-safe re-execution; see ``docs/engine.md``).
+``mapsdi_create_kg`` remains the one-shot convenience (Fig. 2 in one call);
+``make_planned_fn`` / ``make_mapsdi_fn`` are **deprecated** shims kept for
+source compatibility — they delegate to a ``KGEngine`` session and warn
+once per process. Unlike the historical closures, the shims inherit the
+engine's overflow safety: re-running on grown extensions recompiles
+instead of silently truncating.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 from typing import Dict, Optional, Tuple
 
 from repro.relalg import Table
-from repro.relalg.guard import host_int
 
-from .rdfizer import Engine, RDFizer
+from .rdfizer import Engine
 from .schema import DIS
-from .transform import TransformStats, apply_mapsdi, plan_mapsdi
+from .transform import apply_mapsdi
+
+_WARNED: set = set()
 
 
-def _planned_closure(dis: DIS, engine: Engine, dedup: Optional[str],
-                     stats: Optional[TransformStats] = None):
-    """(symbolic fixpoint, annotate, compile) -> (fn, plan, counts)."""
-    from repro.plan.annotate import annotate
-    from repro.plan.compile import compile_plan
-    plan = plan_mapsdi(dis, stats=stats)
-    counts, caps = annotate(plan)
-    view = dataclasses.replace(dis.copy(), maps=plan.maps)
-    emitter = RDFizer(view, engine, join_caps={}, dedup=dedup)
-    fn = compile_plan(plan, emitter, engine=engine, dedup=dedup, caps=caps)
-    return fn, plan, counts
+def _warn_once(name: str, replacement: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use repro.api.KGEngine — {replacement}",
+        DeprecationWarning, stacklevel=3)
 
 
 def mapsdi_create_kg(dis: DIS, engine: Engine = "sdm",
                      dedup: Optional[str] = None,
                      ) -> Tuple[Table, Dict[str, object]]:
-    """Plan + execute; returns (KG, stats incl. Table-1-style sizes).
+    """Plan + execute once; returns (KG, stats incl. Table-1-style sizes).
 
-    ``dedup`` selects the δ strategy (``"lex"`` | ``"hash"``) for both the
-    planned Rule 1–3 pre-processing and the engine sinks; None = engine
-    default. ``source_rows_after`` reports the plan-time cardinality of
-    each map's pre-processed relation (the paper's Table-1 reduced sizes)
-    even though those relations only ever exist inside the fused closure.
+    Delegates to a fresh :class:`repro.api.KGEngine` session, so repeated
+    calls over structurally-identical DISes hit the shared plan cache: on
+    a hit the capacity annotation (the host pass over the sources) and the
+    closure compilation are skipped and no longer counted in
+    ``preprocess_seconds`` — only the cheap symbolic re-plan that derives
+    the cache key remains — and the stats carry the session's
+    ``recompiles`` / ``plan_cache_hit`` counters. ``dedup`` selects the δ
+    strategy (``"lex"`` | ``"hash"``) for both the planned Rule 1–3
+    pre-processing and the engine sinks; None = engine default.
     """
-    from repro.plan.compile import input_names
-    t0 = time.perf_counter()
-    tstats = TransformStats()
-    fn, plan, counts = _planned_closure(dis, engine, dedup, tstats)
-    names = input_names(plan)
-    rows_after = {names[tm.name]: counts[plan.inputs[tm.name]]
-                  for tm in plan.maps}
-    t1 = time.perf_counter()
-    kg, raw = fn(dis.sources)
-    kg.data.block_until_ready()
-    t2 = time.perf_counter()
-    return kg, {
-        "raw_triples": host_int(raw),
-        "kg_triples": host_int(kg.count),
-        "preprocess_seconds": t1 - t0,   # planning: sync-free fixpoint +
-                                         # one host read per source (annotate)
-        "semantify_seconds": t2 - t1,    # the single fused closure
-        "source_rows_before": {k: host_int(v.count)
-                               for k, v in dis.sources.items()},
-        "source_rows_after": rows_after,
-        "rule1": tstats.rule1_applications,
-        "rule2": tstats.rule2_applications,
-        "rule3": tstats.rule3_merges,
-        "sigma": tstats.sigma_pushdowns,
-        "cse_shared": tstats.cse_shared_subplans,
-    }
+    from repro.api import KGEngine
+    return KGEngine(dis, engine=engine, dedup=dedup).create_kg()
 
 
 def make_planned_fn(dis: DIS, engine: Engine = "sdm",
                     dedup: Optional[str] = None):
-    """Plan once, return the jitted ``raw sources -> (kg, raw)`` closure —
-    steady-state re-execution over *untransformed* source extensions, with
-    pre-processing fused into the program.
+    """DEPRECATED: use ``KGEngine(dis).run`` (or ``.ingest``).
 
-    Buffers are sized from the planning-time extension (exact). Re-running
-    on extensions where more rows survive some operator than at plan time
-    silently truncates, like join-cap overflow — re-plan when sources
-    grow (recompile-on-overflow is a ROADMAP item)."""
-    fn, plan, _counts = _planned_closure(dis, engine, dedup)
-    return fn, plan
+    Returns ``(fn, plan)`` where ``fn(raw_sources) -> (kg, raw)`` executes
+    the session's cached closure — steady-state re-execution over
+    *untransformed* source extensions. Via the engine, the closure is now
+    overflow-safe: extensions that outgrow the plan-time capacities trigger
+    one transparent recompile instead of silent truncation."""
+    _warn_once("make_planned_fn",
+               "engine = KGEngine(dis); engine.run(sources)")
+    from repro.api import KGEngine
+    eng = KGEngine(dis, engine=engine, dedup=dedup)
+    return eng.run, eng.plan
 
 
 def make_mapsdi_fn(dis: DIS, engine: Engine = "sdm",
                    dedup: Optional[str] = None):
-    """Pre-transform once (planning + one materialization), return a
-    jit-friendly semantify closure over the *transformed* sources — the
-    historical steady-state shape, where pre-processed extensions exist as
-    concrete tables (e.g. to be shipped to another pod)."""
+    """DEPRECATED: use ``apply_mapsdi`` + ``KGEngine`` (or just
+    ``KGEngine(dis)``).
+
+    Pre-transform once (planning + one materialization), return a semantify
+    closure over the *transformed* sources — the historical steady-state
+    shape, where pre-processed extensions exist as concrete tables (e.g. to
+    be shipped to another pod)."""
+    _warn_once("make_mapsdi_fn",
+               "dis2, _ = apply_mapsdi(dis); engine = KGEngine(dis2)")
+    from repro.api import KGEngine
     dis2, _ = apply_mapsdi(dis, dedup=dedup)
-    rdfizer = RDFizer(dis2, engine, dedup=dedup)
+    eng = KGEngine(dis2, engine=engine, dedup=dedup)
 
     def fn(sources: Optional[Dict[str, Table]] = None):
-        return rdfizer(sources if sources is not None else dis2.sources)
+        return eng.run(dis2.sources if sources is None else sources)
 
     return fn, dis2

@@ -272,8 +272,19 @@ class RDFizer:
 
 def rdfize(dis: DIS, engine: Engine = "rmlmapper",
            dedup: Optional[str] = None) -> Tuple[Table, int]:
-    """Eager convenience wrapper: ``RDFize(DIS)`` -> (KG, raw count)."""
-    kg, raw = RDFizer(dis, engine, dedup=dedup)()
+    """DEPRECATED eager wrapper: ``RDFize(DIS)`` -> (KG, raw count).
+
+    Delegates to a :class:`repro.api.KGEngine` session with
+    ``optimize=False`` (blind evaluation of the un-rewritten rules — the
+    semantics ``raw`` has always measured), so repeated rdfize calls over
+    structurally-identical DISes share one cached closure. Use
+    ``KGEngine(dis, engine, dedup, optimize=False)`` directly for session
+    state (ingestion, stats)."""
+    from repro.api import KGEngine
+    from .pipeline import _warn_once
+    _warn_once("rdfize",
+               "KGEngine(dis, engine, dedup, optimize=False).run()")
+    kg, raw = KGEngine(dis, engine, dedup, optimize=False).run()
     return kg, host_int(raw)
 
 

@@ -146,6 +146,11 @@ class DIS:
     # names of sources known to be projected+deduplicated already (MapSDI
     # provenance — makes the transformation rules idempotent)
     preprocessed: set = dataclasses.field(default_factory=set)
+    # names of sources whose extension already satisfies the owning maps'
+    # σ selections (set by the planner's materialization, where σ is pushed
+    # below the final shrink; the eager driver never bakes σ, so its DIS'
+    # keeps the join-time parent re-select)
+    sigma_baked: set = dataclasses.field(default_factory=set)
 
     def template_id(self, template: str) -> int:
         tid = self.templates.get(template)
@@ -168,4 +173,5 @@ class DIS:
         return DIS(sources=dict(self.sources), maps=list(self.maps),
                    vocab=self.vocab, templates=dict(self.templates),
                    null_code=self.null_code,
-                   preprocessed=set(self.preprocessed))
+                   preprocessed=set(self.preprocessed),
+                   sigma_baked=set(self.sigma_baked))

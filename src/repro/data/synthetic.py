@@ -209,6 +209,38 @@ def make_group_b_dis(n_rows: int, redundancy: float = 0.75, seed: int = 0,
     })
 
 
+def make_group_b_extension_records(n_rows: int, seed: int = 0,
+                                   sources: Tuple[str, ...] = ("gene",
+                                                               "chrom")
+                                   ) -> Dict[str, List[Dict]]:
+    """Extension rows shaped like :func:`make_group_b_dis`'s sources — new
+    samples over shared gene-entity pools so join conditions keep matching.
+    The micro-batch generator behind ``benchmarks/engine.py`` and the
+    ``kg_serve`` streaming driver (encode with the session's vocab via
+    ``Table.from_records(recs, attrs, engine.vocab)``)."""
+    rng = np.random.default_rng(seed)
+    bios = ["protein_coding", "lncRNA", "miRNA", "snoRNA"]
+    chroms = [f"chr{i}" for i in range(1, 23)]
+    pool = _entity_pool(rng, max(1, n_rows // 2), "GENE")
+    out: Dict[str, List[Dict]] = {}
+    if "gene" in sources:
+        genes = pool[rng.integers(0, len(pool), size=n_rows)]
+        out["gene"] = [
+            {"ID": int(i), "Genename": str(g),
+             "HGNC": int(rng.integers(1, 20000)),
+             "enst": f"ENST{rng.integers(0, 10**8):08d}",
+             "Biotype": bios[_stable_hash(str(g)) % len(bios)]}
+            for i, g in enumerate(genes)]
+    if "chrom" in sources:
+        genes_r = pool[rng.integers(0, len(pool), size=n_rows)]
+        out["chrom"] = [
+            {"ID": int(i), "Genename": str(g),
+             "Chromosome": chroms[_stable_hash(str(g)) % len(chroms)],
+             "Sample": f"S{rng.integers(0, 10**6):06d}"}
+            for i, g in enumerate(genes_r)]
+    return out
+
+
 def make_motivating_dis(n_rows: int = 2000, overlap: float = 0.9,
                         seed: int = 0) -> DIS:
     """Fig. 1: three sources (mutations / downstream genes / drug

@@ -9,10 +9,15 @@ Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --requests 16 --slots 4 --prompt-len 32 --gen-len 16
+
+``--kg`` switches to the knowledge-graph ingestion loop instead: a
+``KGEngine`` session served micro-batches of source extensions
+(:mod:`repro.launch.kg_serve` — same session API as the benchmarks).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -27,6 +32,10 @@ from repro.serve.decode import make_prefill, make_serve_step
 
 
 def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if "--kg" in argv:   # KG-session serving loop (repro.launch.kg_serve)
+        from . import kg_serve
+        return kg_serve.main([a for a in argv if a != "--kg"])
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=16)

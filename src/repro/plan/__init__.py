@@ -8,7 +8,8 @@ every buffer at plan time, and ``compile_plan`` lowers the optimized DAG to
 a single jitted ``sources -> (KG, raw)`` closure. See ``docs/planner.md``.
 """
 from .ir import (Distinct, EmitTriples, EquiJoin, Node, Pred, Project, Scan,
-                 Select, Union, intern, iter_nodes, make_select, tree_size)
+                 Select, Union, fingerprint, intern, iter_nodes, make_select,
+                 tree_size)
 from .lower import LogicalPlan, lower, selection_preds
 from .optimize import (PlanStats, cse, merge_maps, optimize,
                        push_projections, push_selections)
@@ -21,7 +22,8 @@ __all__ = [
     "Distinct", "EmitTriples", "EquiJoin", "LogicalPlan", "Node",
     "PlanStats", "Pred", "Project", "Scan", "Select", "Union", "annotate",
     "compile_plan", "cse", "dump_plan", "execute_node", "explain",
-    "input_names", "intern", "iter_nodes", "lower", "make_select",
+    "fingerprint", "input_names", "intern", "iter_nodes", "lower",
+    "make_select",
     "materialize_plan", "merge_maps", "optimize", "push_projections",
     "push_selections", "selection_preds", "tree_size",
 ]

@@ -1,29 +1,43 @@
 """Plan-time cardinality annotation — ``plan_join_caps`` generalized to a
 per-node capacity on the whole IR.
 
-``annotate(plan)`` evaluates every *relation* node of the optimized DAG on
-the host (numpy, exact — the planning-time analogue of a cardinality
-estimator with perfect statistics) and returns ``(counts, caps)``:
+Two modes (the ROADMAP's ``annotate(mode="bound")`` item):
 
-* ``counts[node]`` — exact valid-row count of the node's output for the
-  planning-time source extensions (``EquiJoin`` nodes get their exact match
-  total, the quantity ``plan_join_caps`` computed per (map, pom)).
-* ``caps[node]``   — ``round_cap(count)``, the static buffer capacity the
-  compiler sizes that node's output with.
+* ``mode="exact"`` (default) evaluates every *relation* node of the
+  optimized DAG on the host (numpy, exact — the planning-time analogue of a
+  cardinality estimator with perfect statistics). One host materialization
+  per scanned source; capacities are exact for the planning extension.
+* ``mode="bound"`` sizes every node from *structural upper bounds* with no
+  host pass at all: a Scan is bounded by its buffer capacity (static pytree
+  metadata — no device read), π/σ/δ by their child, ∪ by the sum of its
+  inputs. An ⋈ is the one operator whose true bound (|L|·|R|) is useless in
+  practice, so it gets the FK-join heuristic ``|L| + |R|``; the compiled
+  closure's overflow flag plus the engine's recompile-on-overflow make the
+  heuristic safe (see ``docs/engine.md``).
 
-This is the only place the planned pipeline reads source data before
-execution: one host materialization per scanned source, all downstream
-arithmetic in numpy. Capacities are exact for the planning extension; like
-join caps before, re-running the compiled closure on *larger* extensions is
-the caller's overflow risk.
+``annotate(plan)`` returns ``(counts, caps)``:
+
+* ``counts[node]`` — row count (exact or bound) of the node's output
+  (``EquiJoin`` nodes get their match total, the quantity ``plan_join_caps``
+  computed per (map, pom)).
+* ``caps[node]``   — ``cap_fn(ceil(count * slack))``, the static buffer
+  capacity the compiler sizes that node's output with. ``cap_fn`` defaults
+  to :func:`round_cap` (exact fit); the ``KGEngine`` passes
+  :func:`repro.relalg.table.bucket_cap` so structurally-identical plans
+  over same-bucket extensions share one compiled closure.
+
+``sources`` overrides the extensions to annotate against (default:
+``plan.dis.sources``) — the engine re-annotates against its *current*
+session sources after ingestion.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+import math
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.relalg.table import round_cap
+from repro.relalg.table import Table, round_cap
 
 from .ir import (Distinct, EmitTriples, EquiJoin, Node, Project, Scan,
                  Select, Union)
@@ -32,21 +46,21 @@ from .lower import LogicalPlan
 Rows = Tuple[np.ndarray, Tuple[str, ...]]  # valid rows [n, k] + attr names
 
 
-def _eval_rows(node: Node, plan: LogicalPlan,
+def _eval_rows(node: Node, sources: Mapping[str, Table],
                memo: Dict[Node, Rows]) -> Rows:
     hit = memo.get(node)
     if hit is not None:
         return hit
     if isinstance(node, Scan):
-        table = plan.dis.sources[node.source]
+        table = sources[node.source]
         rows: np.ndarray = table.to_codes()
         attrs = tuple(table.attrs)
     elif isinstance(node, Project):
-        child, cattrs = _eval_rows(node.child, plan, memo)
+        child, cattrs = _eval_rows(node.child, sources, memo)
         idx = [cattrs.index(a) for a, _ in node.spec]
         rows, attrs = child[:, idx], node.attrs
     elif isinstance(node, Select):
-        child, cattrs = _eval_rows(node.child, plan, memo)
+        child, cattrs = _eval_rows(node.child, sources, memo)
         keep = np.ones(len(child), dtype=bool)
         for p in node.preds:
             col = child[:, cattrs.index(p.attr)]
@@ -56,13 +70,13 @@ def _eval_rows(node: Node, plan: LogicalPlan,
                 keep &= col != p.code
         rows, attrs = child[keep], cattrs
     elif isinstance(node, Distinct):
-        child, cattrs = _eval_rows(node.child, plan, memo)
+        child, cattrs = _eval_rows(node.child, sources, memo)
         rows, attrs = np.unique(child, axis=0), cattrs
     elif isinstance(node, Union):
-        parts: List[np.ndarray] = []
+        parts = []
         attrs = node.attrs
         for c in node.inputs:
-            crows, cattrs = _eval_rows(c, plan, memo)
+            crows, cattrs = _eval_rows(c, sources, memo)
             parts.append(crows[:, [cattrs.index(a) for a in attrs]])
         rows = np.concatenate(parts, axis=0)
     else:
@@ -82,33 +96,80 @@ def join_match_total(lk: np.ndarray, rk: np.ndarray) -> int:
     return int(counts[idx][match].sum())
 
 
-def _join_total(node: EquiJoin, plan: LogicalPlan,
+def _join_total(node: EquiJoin, sources: Mapping[str, Table],
                 memo: Dict[Node, Rows]) -> int:
-    left, lattrs = _eval_rows(node.left, plan, memo)
-    right, rattrs = _eval_rows(node.right, plan, memo)
+    left, lattrs = _eval_rows(node.left, sources, memo)
+    right, rattrs = _eval_rows(node.right, sources, memo)
     return join_match_total(left[:, lattrs.index(node.left_key)],
                             right[:, rattrs.index(node.right_key)])
 
 
-def annotate(plan: LogicalPlan
+def _bound(node: Node, sources: Mapping[str, Table],
+           memo: Dict[Node, int]) -> int:
+    """Structural upper bound on a node's output rows — static shape
+    metadata only, zero device *and* host reads."""
+    hit = memo.get(node)
+    if hit is not None:
+        return hit
+    if isinstance(node, Scan):
+        out = sources[node.source].capacity
+    elif isinstance(node, (Project, Select, Distinct)):
+        out = _bound(node.children()[0], sources, memo)
+    elif isinstance(node, Union):
+        out = sum(_bound(c, sources, memo) for c in node.inputs)
+    elif isinstance(node, EquiJoin):
+        # FK-join heuristic, NOT a true bound (that is |L|·|R|); the
+        # runtime overflow flag + recompile-on-overflow covers the gap
+        out = _bound(node.left, sources, memo) + \
+            _bound(node.right, sources, memo)
+    else:
+        raise TypeError(f"not a relation node: {type(node).__name__}")
+    memo[node] = out
+    return out
+
+
+def annotate(plan: LogicalPlan, mode: str = "exact", slack: float = 1.0,
+             cap_fn: Callable[[int], int] = round_cap,
+             sources: Optional[Mapping[str, Table]] = None,
              ) -> Tuple[Dict[Node, int], Dict[Node, int]]:
-    """Exact (counts, capacities) for every relation and join node reachable
-    from the plan's emits. One host read per scanned source."""
-    memo: Dict[Node, Rows] = {}
+    """(counts, capacities) for every relation and join node reachable from
+    the plan's emits — exact (one host read per scanned source) or
+    structural bounds (no host pass); see the module docstring."""
+    if mode not in ("exact", "bound"):
+        raise ValueError(f"unknown annotate mode {mode!r}")
+    sources = plan.dis.sources if sources is None else sources
     counts: Dict[Node, int] = {}
+    if mode == "bound":
+        bmemo: Dict[Node, int] = {}
+
+        def count_of(node: Node) -> int:
+            return _bound(node, sources, bmemo)
+
+        def join_of(join: EquiJoin) -> int:
+            return _bound(join, sources, bmemo)
+    else:
+        memo: Dict[Node, Rows] = {}
+
+        def count_of(node: Node) -> int:
+            return len(_eval_rows(node, sources, memo)[0])
+
+        def join_of(join: EquiJoin) -> int:
+            return _join_total(join, sources, memo)
+
     for emit in plan.emits():
         assert isinstance(emit, EmitTriples)
         for node in _relation_nodes(emit.input):
             if node not in counts:
-                counts[node] = len(_eval_rows(node, plan, memo)[0])
+                counts[node] = count_of(node)
         for _, join in emit.joins:
             for side in (join.left, join.right):
                 for node in _relation_nodes(side):
                     if node not in counts:
-                        counts[node] = len(_eval_rows(node, plan, memo)[0])
+                        counts[node] = count_of(node)
             if join not in counts:
-                counts[join] = _join_total(join, plan, memo)
-    caps = {node: round_cap(c) for node, c in counts.items()}
+                counts[join] = join_of(join)
+    caps = {node: cap_fn(int(math.ceil(c * slack)))
+            for node, c in counts.items()}
     return counts, caps
 
 

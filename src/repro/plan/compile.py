@@ -30,7 +30,7 @@ from repro.relalg.ops import _masked_data, compact
 
 from .ir import (Distinct, EmitTriples, EquiJoin, Node, Project, Scan,
                  Select, Union, iter_nodes)
-from .lower import LogicalPlan
+from .lower import LogicalPlan, selection_preds
 
 
 def _fit(table: Table, cap: Optional[int]) -> Table:
@@ -60,8 +60,15 @@ def _pred_mask(table: Table, preds) -> jax.Array:
 def execute_node(node: Node, sources: Mapping[str, Table],
                  memo: Dict[Node, Table], emitter=None,
                  dedup: Optional[str] = None,
-                 caps: Optional[Mapping[Node, int]] = None) -> Table:
-    """Evaluate one DAG node (and, via ``memo``, each shared subtree once)."""
+                 caps: Optional[Mapping[Node, int]] = None,
+                 overflow: Optional[List[jax.Array]] = None) -> Table:
+    """Evaluate one DAG node (and, via ``memo``, each shared subtree once).
+
+    When ``overflow`` is a list, every capped operator appends a scalar
+    bool flag — "this node needed more rows than its plan-time capacity and
+    was truncated" — exactly once per unique node. ``KGEngine`` reduces the
+    flags to its recompile-on-overflow signal.
+    """
     hit = memo.get(node)
     if hit is not None:
         return hit
@@ -69,17 +76,28 @@ def execute_node(node: Node, sources: Mapping[str, Table],
     if isinstance(node, Scan):
         out = sources[node.source]
     elif isinstance(node, Project):
-        child = execute_node(node.child, sources, memo, emitter, dedup, caps)
+        child = execute_node(node.child, sources, memo, emitter, dedup, caps,
+                             overflow)
         out = project_as(child, list(node.spec))
     elif isinstance(node, Select):
-        child = execute_node(node.child, sources, memo, emitter, dedup, caps)
-        out = _fit(select_mask(child, _pred_mask(child, node.preds)),
-                   caps.get(node))
+        child = execute_node(node.child, sources, memo, emitter, dedup, caps,
+                             overflow)
+        sel = select_mask(child, _pred_mask(child, node.preds))
+        cap = caps.get(node)
+        if overflow is not None and cap is not None:
+            overflow.append(sel.count > jnp.int32(cap))
+        out = _fit(sel, cap)
     elif isinstance(node, Distinct):
-        child = execute_node(node.child, sources, memo, emitter, dedup, caps)
-        out = _fit(distinct(child, dedup=dedup), caps.get(node))
+        child = execute_node(node.child, sources, memo, emitter, dedup, caps,
+                             overflow)
+        dd = distinct(child, dedup=dedup)
+        cap = caps.get(node)
+        if overflow is not None and cap is not None:
+            overflow.append(dd.count > jnp.int32(cap))
+        out = _fit(dd, cap)
     elif isinstance(node, Union):
-        parts = [execute_node(c, sources, memo, emitter, dedup, caps)
+        parts = [execute_node(c, sources, memo, emitter, dedup, caps,
+                              overflow)
                  for c in node.inputs]
         aligned = [parts[0]] + [project(p, parts[0].attrs) for p in parts[1:]]
         data = jnp.concatenate([_masked_data(p) for p in aligned], axis=0)
@@ -87,17 +105,23 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         data, count = compact(data, keep)
         out = Table(data=data, count=count, attrs=parts[0].attrs)
     elif isinstance(node, EquiJoin):
-        left = execute_node(node.left, sources, memo, emitter, dedup, caps)
-        right = execute_node(node.right, sources, memo, emitter, dedup, caps)
+        left = execute_node(node.left, sources, memo, emitter, dedup, caps,
+                            overflow)
+        right = execute_node(node.right, sources, memo, emitter, dedup, caps,
+                             overflow)
         cap = caps.get(node, round_cap(left.capacity * 4))
-        out, _total = equi_join(left, right, node.left_key, node.right_key,
-                                out_capacity=cap,
-                                right_suffix=node.right_suffix)
+        out, total = equi_join(left, right, node.left_key, node.right_key,
+                               out_capacity=cap,
+                               right_suffix=node.right_suffix)
+        if overflow is not None:
+            overflow.append(total > jnp.int32(cap))
     elif isinstance(node, EmitTriples):
         if emitter is None:
             raise ValueError("EmitTriples node needs an emitter")
-        table = execute_node(node.input, sources, memo, emitter, dedup, caps)
-        joins = {i: execute_node(j, sources, memo, emitter, dedup, caps)
+        table = execute_node(node.input, sources, memo, emitter, dedup, caps,
+                             overflow)
+        joins = {i: execute_node(j, sources, memo, emitter, dedup, caps,
+                                 overflow)
                  for i, j in node.joins}
         out = emitter.emit_triples(node.tm, table, joins)
     else:
@@ -108,17 +132,26 @@ def execute_node(node: Node, sources: Mapping[str, Table],
 
 def compile_plan(plan: LogicalPlan, emitter, engine: str = "rmlmapper",
                  dedup: Optional[str] = None,
-                 caps: Optional[Mapping[Node, int]] = None, jit: bool = True):
+                 caps: Optional[Mapping[Node, int]] = None, jit: bool = True,
+                 report_overflow: bool = False, sink: bool = True):
     """Lower the DAG to one ``sources -> (kg, raw)`` closure (jitted by
     default). Mirrors the engine semantics: ``"sdm"`` deduplicates each
     map's output as it is produced, ``"rmlmapper"`` only at the sink; the
     sink δ runs in either mode. ``raw`` is the engine's materialized triple
     count before the sink δ.
 
-    Capacities in ``caps`` are exact for the planning-time extension;
+    Capacities in ``caps`` are sized for the planning-time extension;
     re-running the closure on extensions where more rows survive a node
-    than planned silently truncates (the ``equi_join`` overflow
-    convention) — re-plan when extensions grow.
+    than planned truncates (the ``equi_join`` overflow convention). With
+    ``report_overflow=True`` the closure returns ``(kg, raw, overflowed)``
+    where ``overflowed`` is a scalar bool — True iff any capped node was
+    truncated — which is what lets ``KGEngine`` re-execute safely instead
+    of silently truncating: re-plan (or let the engine recompile) when it
+    fires.
+
+    ``sink=False`` stops before the sink δ and returns the compacted union
+    of the per-map outputs (per-map δ still applied under ``"sdm"``) — the
+    input the distributed shard_map global-δ path consumes.
 
     The engine/sink semantics below (per-map δ under sdm, δδ = δ for a
     single map, sink δ) must stay in lockstep with
@@ -126,21 +159,30 @@ def compile_plan(plan: LogicalPlan, emitter, engine: str = "rmlmapper",
     display."""
     emit_nodes = plan.emits()
 
-    def fn(sources: Mapping[str, Table]) -> Tuple[Table, jax.Array]:
+    def fn(sources: Mapping[str, Table]):
         memo: Dict[Node, Table] = {}
-        per_map = [execute_node(e, sources, memo, emitter, dedup, caps)
+        flags: Optional[List[jax.Array]] = [] if report_overflow else None
+        per_map = [execute_node(e, sources, memo, emitter, dedup, caps,
+                                flags)
                    for e in emit_nodes]
         if engine == "sdm":
             per_map = [distinct(t, dedup=dedup) for t in per_map]
         raw = jnp.sum(jnp.stack([t.count for t in per_map]))
-        if engine == "sdm" and len(per_map) == 1:
-            return per_map[0], raw      # δδ = δ: per-map δ IS the sink δ
+
+        def done(kg: Table):
+            if not report_overflow:
+                return kg, raw
+            over = (jnp.any(jnp.stack(flags)) if flags
+                    else jnp.zeros((), dtype=bool))
+            return kg, raw, over
+
+        if sink and engine == "sdm" and len(per_map) == 1:
+            return done(per_map[0])     # δδ = δ: per-map δ IS the sink δ
         data = jnp.concatenate([t.data for t in per_map], axis=0)
         mask = jnp.concatenate([t.valid_mask for t in per_map])
         data, count = compact(data, mask)
-        kg = distinct(Table(data=data, count=count,
-                            attrs=per_map[0].attrs), dedup=dedup)
-        return kg, raw
+        merged = Table(data=data, count=count, attrs=per_map[0].attrs)
+        return done(distinct(merged, dedup=dedup) if sink else merged)
 
     return jax.jit(fn) if jit else fn
 
@@ -209,6 +251,7 @@ def materialize_plan(plan: LogicalPlan, dedup: Optional[str] = None
 
     sources: Dict[str, Table] = {}
     preprocessed = set()
+    sigma_baked: Dict[str, bool] = {}
     rows_after: Dict[str, int] = {}
     new_maps = []
     for tm in plan.maps:
@@ -222,6 +265,17 @@ def materialize_plan(plan: LogicalPlan, dedup: Optional[str] = None
                 sources[name] = shrink_to_fit(tables[node])  # the host sync
                 preprocessed.add(name)
             rows_after[name] = host_int(sources[name].count)
+        # σ-baked provenance: the materialized extension carries the map's
+        # σ selections iff they were pushed into the materialized subtree
+        # (or the source was already flagged). A source shared by several
+        # maps is baked only if it is baked for every one of them.
+        if isinstance(node, Scan):
+            ok = node.source in plan.sigma_baked
+        else:
+            have = {p for n in iter_nodes(node)
+                    if isinstance(n, Select) for p in n.preds}
+            ok = all(p in have for p in selection_preds(dis, tm))
+        sigma_baked[name] = sigma_baked.get(name, True) and ok
         new_maps.append(tm if tm.source == name
                         else dataclasses.replace(tm, source=name))
 
@@ -229,4 +283,5 @@ def materialize_plan(plan: LogicalPlan, dedup: Optional[str] = None
     out.sources = sources
     out.maps = new_maps
     out.preprocessed = preprocessed
+    out.sigma_baked = {name for name, ok in sigma_baked.items() if ok}
     return out, rows_after

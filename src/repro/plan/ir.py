@@ -21,7 +21,8 @@ operator, producing the 5-column triple relation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+import hashlib
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 from repro.core.schema import TRIPLE_ATTRS, TripleMap
 
@@ -226,6 +227,52 @@ def intern(node: Node, memo: Optional[Dict[Node, Node]] = None) -> Node:
         return memo.setdefault(out, out)
 
     return go(node)
+
+
+def fingerprint(roots: Sequence[Node]) -> str:
+    """Deterministic structural digest (sha1 hex) of a plan DAG.
+
+    Two plans fingerprint equal iff they would compile to the same program
+    over the same dictionary codes: node structure, σ predicate *codes*,
+    π/⋈ attribute wiring, and — for :class:`EmitTriples` — the full triple
+    map (templates, constants, selections as their source strings). Shared
+    subtrees are serialized once, so the digest is DAG-shaped, stable
+    across processes (no ``id()``/``hash()`` salting), and what the
+    ``KGEngine`` plan cache keys on.
+    """
+    memo: Dict[Node, int] = {}
+    lines: list = []
+
+    def visit(n: Node) -> int:
+        hit = memo.get(n)
+        if hit is not None:
+            return hit
+        if isinstance(n, Scan):
+            desc = f"scan {n.source} {n.scan_attrs}"
+        elif isinstance(n, Select):
+            preds = tuple((p.attr, p.op, p.code) for p in n.preds)
+            desc = f"select {visit(n.child)} {preds}"
+        elif isinstance(n, Project):
+            desc = f"project {visit(n.child)} {n.spec}"
+        elif isinstance(n, Distinct):
+            desc = f"distinct {visit(n.child)}"
+        elif isinstance(n, Union):
+            desc = f"union {tuple(visit(c) for c in n.inputs)}"
+        elif isinstance(n, EquiJoin):
+            desc = (f"join {visit(n.left)} {visit(n.right)} "
+                    f"{n.left_key} {n.right_key} {n.right_suffix}")
+        elif isinstance(n, EmitTriples):
+            joins = tuple((i, visit(j)) for i, j in n.joins)
+            desc = f"emit {visit(n.input)} {joins} {n.tm!r}"
+        else:  # pragma: no cover - future node kinds must opt in explicitly
+            raise TypeError(f"cannot fingerprint {type(n).__name__}")
+        out = memo[n] = len(lines)
+        lines.append(desc)
+        return out
+
+    for r in roots:
+        visit(r)
+    return hashlib.sha1("\n".join(lines).encode()).hexdigest()
 
 
 def make_select(child: Node, preds: Tuple[Pred, ...]) -> Node:

@@ -47,6 +47,10 @@ class LogicalPlan:
     inputs: Dict[str, Node]
     names: Dict[Node, str] = dataclasses.field(default_factory=dict)
     preprocessed: frozenset = frozenset()
+    # sources whose extension already satisfies the owning maps' σ
+    # selections (planner-materialized DIS' — σ was pushed below the
+    # materialization; eager-materialized DIS' never bakes σ)
+    sigma_baked: frozenset = frozenset()
 
     def map_by_name(self, name: str) -> TripleMap:
         return map_by_name(self.maps, name)
@@ -63,10 +67,16 @@ class LogicalPlan:
         assert isinstance(rom, RefObjectMap)
         parent_tm = self.map_by_name(rom.parent_map)
         parent_in = self.inputs[parent_tm.name]
-        have = {p for n in iter_nodes(parent_in)
-                if isinstance(n, Select) for p in n.preds}
-        preds = tuple(p for p in selection_preds(self.dis, parent_tm)
-                      if p not in have)
+        if isinstance(parent_in, Scan) and \
+                parent_in.source in self.sigma_baked:
+            preds: Tuple[Pred, ...] = ()  # σ-baked provenance: the
+            # materialized extension is already filtered, skip the
+            # (idempotent) re-select and its full compact per join per run
+        else:
+            have = {p for n in iter_nodes(parent_in)
+                    if isinstance(n, Select) for p in n.preds}
+            preds = tuple(p for p in selection_preds(self.dis, parent_tm)
+                          if p not in have)
         parent_in = make_select(parent_in, preds)
         spec = (((parent_tm.subject.attr, "__ps"),)
                 if parent_tm.subject.attr else ()) + \
@@ -103,4 +113,5 @@ def lower(dis: DIS) -> LogicalPlan:
         src = dis.sources[tm.source]
         inputs[tm.name] = Scan(tm.source, tuple(src.attrs))
     return LogicalPlan(dis=dis, maps=list(dis.maps), inputs=inputs,
-                       preprocessed=frozenset(dis.preprocessed))
+                       preprocessed=frozenset(dis.preprocessed),
+                       sigma_baked=frozenset(dis.sigma_baked))

@@ -262,6 +262,38 @@ def union(a: Table, b: Table, dedup: bool | str = False) -> Table:
     return distinct(out, dedup=None if dedup is True else dedup)
 
 
+def append_rows(base: Table, delta: Table,
+                capacity: Optional[int] = None) -> Table:
+    """Append ``delta``'s valid rows after ``base``'s (micro-batch ingestion).
+
+    ``delta``'s columns are aligned to ``base.attrs`` by name. When the
+    combined rows fit ``base.capacity`` the write lands in the padding
+    region and the output keeps base's shape — a shape-stable update, so a
+    jitted closure over the table re-runs with zero re-trace. Otherwise the
+    buffer grows to ``capacity`` (default: the next :func:`bucket_cap`
+    bucket), which changes the shape — the caller's recompile signal.
+
+    Host cost: two scalar syncs (the row counts); row data stays on device.
+    """
+    from .guard import host_int
+    from .table import bucket_cap
+    aligned = project(delta, base.attrs)
+    n0, n1 = host_int(base.count), host_int(delta.count)
+    total = n0 + n1
+    if total > base.capacity:
+        cap = bucket_cap(total) if capacity is None else capacity
+        if cap < total:
+            raise ValueError(f"{total} rows exceed capacity {cap}")
+        pad = jnp.full((cap - base.capacity, base.n_attrs), jnp.int32(PAD_ID))
+        grown = jnp.concatenate([_masked_data(base), pad], axis=0)
+        base = Table(data=grown, count=base.count, attrs=base.attrs)
+    idx = jnp.arange(aligned.capacity, dtype=jnp.int32)
+    dest = jnp.where(idx < jnp.int32(n1), idx + jnp.int32(n0),
+                     jnp.int32(base.capacity))      # invalid rows -> dropped
+    data = _masked_data(base).at[dest].set(_masked_data(aligned), mode="drop")
+    return Table(data=data, count=jnp.int32(total), attrs=base.attrs)
+
+
 def equi_join(left: Table, right: Table, left_key: str, right_key: str,
               out_capacity: int, right_suffix: str = "r_",
               ) -> Tuple[Table, jax.Array]:

@@ -26,6 +26,23 @@ def round_cap(n: int, mult: int = 8) -> int:
     return max(mult, ((int(n) + mult - 1) // mult) * mult)
 
 
+def bucket_cap(n: int, mult: int = 8, growth: float = 2.0) -> int:
+    """Round a row count up to a *geometric* capacity bucket (8, 16, 32, …).
+
+    :func:`round_cap` sizes a buffer exactly; ``bucket_cap`` sizes it for a
+    whole *range* of row counts, so a plan compiled for one bucket stays
+    valid for every extension that fits the bucket, and a steadily growing
+    source crosses only O(log n) buckets — hence O(log n) recompiles — over
+    its lifetime. This is the capacity quantization the ``KGEngine`` plan
+    cache keys on (see ``docs/engine.md``).
+    """
+    cap = mult
+    n = int(n)
+    while cap < n:
+        cap = round_cap(int(cap * growth), mult)
+    return cap
+
+
 def shrink_to_fit(table: "Table", mult: int = 8) -> "Table":
     """Materialize a table at capacity == round_cap(count) (host sync)."""
     n = host_int(table.count)

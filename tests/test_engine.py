@@ -1,0 +1,300 @@
+"""KGEngine session tests: plan cache, incremental ingestion, overflow-safe
+re-execution, bound-mode annotation, distributed closure reuse.
+
+The hypothesis-based ingest property sweep lives in
+``test_engine_properties.py`` (skipped without the test extra); this file
+keeps a seeded sweep so the same invariant — ``engine.ingest`` stays
+bit-identical to a fresh run over the accumulated sources — is exercised
+in every environment.
+"""
+import numpy as np
+import pytest
+
+from repro.api import KGEngine, PLAN_CACHE
+from repro.core import parse_dis
+from repro.core.rdfizer import RDFizer
+from repro.data.synthetic import make_group_b_dis
+from repro.relalg import Table, bucket_cap, forbid_transfers
+
+
+def _oracle(dis, sources, engine="sdm", dedup=None):
+    """Fresh un-cached run over explicit sources — the bit-level oracle."""
+    acc = dis.copy()
+    acc.sources = dict(sources)
+    kg, raw = RDFizer(acc, engine, dedup=dedup)()
+    return kg
+
+
+def _reencode(src_dis, name, vocab, attrs, limit=None):
+    """Rows of ``src_dis.sources[name]`` re-interned under ``vocab``."""
+    recs = src_dis.sources[name].to_records(src_dis.vocab)
+    return Table.from_records(recs[:limit], attrs, vocab)
+
+
+# ---------------------------------------------------------------------------
+# capacity buckets
+# ---------------------------------------------------------------------------
+
+def test_bucket_cap_geometric():
+    assert bucket_cap(0) == 8
+    assert bucket_cap(8) == 8
+    assert bucket_cap(9) == 16
+    assert bucket_cap(100) == 128
+    assert bucket_cap(128) == 128
+    assert bucket_cap(129) == 256
+    # monotone, and always a round_cap multiple
+    prev = 0
+    for n in range(1, 300, 7):
+        cap = bucket_cap(n)
+        assert cap >= n and cap >= prev and cap % 8 == 0
+        prev = cap
+
+
+# ---------------------------------------------------------------------------
+# create_kg: correctness + plan cache
+# ---------------------------------------------------------------------------
+
+def test_create_kg_bit_identical_to_fresh_rdfizer():
+    mk = lambda: make_group_b_dis(96, 0.6, seed=1)  # noqa: E731
+    kg_ref = _oracle(mk(), mk().sources)
+    kg, stats = KGEngine(mk()).create_kg()
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+    for key in ("recompiles", "plan_cache_hit", "plan_cache_hits",
+                "preprocess_seconds", "semantify_seconds", "raw_triples"):
+        assert key in stats
+
+
+def test_structurally_identical_sessions_share_one_plan():
+    mk = lambda: make_group_b_dis(80, 0.5, seed=2)  # noqa: E731
+    kg1, s1 = KGEngine(mk()).create_kg()
+    size_after_first = PLAN_CACHE.stats()["size"]
+    kg2, s2 = KGEngine(mk()).create_kg()
+    assert s2["plan_cache_hit"]
+    assert PLAN_CACHE.stats()["size"] == size_after_first  # no new entry
+    np.testing.assert_array_equal(kg1.to_codes(), kg2.to_codes())
+    # the hit skips annotation + compilation: the second session never
+    # jit-traces, so its execution wall time drops by orders of magnitude
+    assert s2["semantify_seconds"] < s1["semantify_seconds"]
+
+
+def test_cache_key_distinguishes_engine_and_dedup():
+    mk = lambda: make_group_b_dis(48, 0.5, seed=3)  # noqa: E731
+    _, s1 = KGEngine(mk(), engine="sdm", dedup="hash").create_kg()
+    _, s2 = KGEngine(mk(), engine="rmlmapper", dedup="hash").create_kg()
+    _, s3 = KGEngine(mk(), engine="sdm", dedup="lex").create_kg()
+    assert not s2["plan_cache_hit"] and not s3["plan_cache_hit"]
+
+
+def test_run_accepts_external_same_shape_sources():
+    dis = make_group_b_dis(64, 0.5, seed=4)
+    eng = KGEngine(dis)
+    kg1, _ = eng.create_kg()
+    other = make_group_b_dis(64, 0.5, seed=4)
+    kg2, _raw = eng.run(other.sources)
+    np.testing.assert_array_equal(kg1.to_codes(), kg2.to_codes())
+
+
+# ---------------------------------------------------------------------------
+# ingest: within-bucket reuse, bucket crossing, interior overflow
+# ---------------------------------------------------------------------------
+
+def test_ingest_within_bucket_reuses_closure():
+    dis = make_group_b_dis(100, 0.6, seed=5)   # bucket 128: room for +28
+    eng = KGEngine(dis)
+    eng.create_kg()
+    delta_src = make_group_b_dis(16, 0.5, seed=50)
+    kg, stats = eng.ingest(
+        {"gene": _reencode(delta_src, "gene", eng.vocab,
+                           dis.sources["gene"].attrs)})
+    assert stats["recompiles"] == 0
+    assert stats["plan_cache_hit"]
+    kg_ref = _oracle(dis, eng.sources)
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+
+
+def test_ingest_bucket_crossing_exactly_one_recompile():
+    dis = make_group_b_dis(64, 0.6, seed=6)
+    eng = KGEngine(dis)
+    eng.create_kg()
+    assert eng.stats()["recompiles"] == 0
+    big = make_group_b_dis(16 * 64, 0.6, seed=60)   # 16x the seed size
+    kg, stats = eng.ingest(
+        {"gene": _reencode(big, "gene", eng.vocab,
+                           dis.sources["gene"].attrs)})
+    assert stats["recompiles"] == 1
+    kg_ref = _oracle(dis, eng.sources)
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+
+
+def test_interior_overflow_recompiles_once_not_truncates():
+    """Same source bucket, but the ingested rows blow past an *interior*
+    δ capacity (plan-time distinct count) — the runtime overflow flag must
+    trigger exactly one recompile instead of silently truncating the KG."""
+    values = [f"v{i % 4}" for i in range(40)]    # 40 rows, 4 distinct
+    spec = {"sources": {"s": {"attrs": ["a", "b"], "records": [
+        {"a": v, "b": v} for v in values]}},
+        "maps": [{"name": "m", "source": "s",
+                  "subject": {"template": "http://ex/T/{a}",
+                              "class": "ex:C"},
+                  "poms": [{"predicate": "ex:p",
+                            "object": {"reference": "b"}}]}]}
+    dis = parse_dis(spec)
+    eng = KGEngine(dis)
+    eng.create_kg()
+    # +10 rows with 10 NEW distinct values: source count 50 stays in the
+    # 64-bucket, but δ output 14 > the plan-time distinct cap of 8
+    fresh = [{"a": f"w{i}", "b": f"w{i}"} for i in range(10)]
+    delta = Table.from_records(fresh, ("a", "b"), eng.vocab)
+    kg, stats = eng.ingest({"s": delta})
+    assert stats["recompiles"] == 1
+    assert stats["kg_triples"] == 2 * (4 + 10)   # class + literal per subject
+    kg_ref = _oracle(dis, eng.sources)
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+    # create_kg recounts Table-1 sizes against the CURRENT extension even
+    # on a cache hit (4 + 10 distinct subjects now)
+    _kg2, stats2 = eng.create_kg()
+    assert sum(stats2["source_rows_after"].values()) == 14
+
+
+@pytest.mark.parametrize("seed,factor", [(7, 1), (8, 4), (9, 16)])
+def test_ingest_seeded_sweep_bit_identical(seed, factor):
+    """Seeded mirror of the hypothesis property: extensions 1x-16x the seed
+    stay bit-identical to a fresh eager run over the accumulated sources."""
+    dis = make_group_b_dis(32, 0.6, seed=seed)
+    eng = KGEngine(dis)
+    eng.create_kg()
+    ext = make_group_b_dis(32 * factor, 0.6, seed=seed + 100)
+    deltas = {name: _reencode(ext, name, eng.vocab,
+                              dis.sources[name].attrs)
+              for name in ("gene", "chrom")}
+    kg, stats = eng.ingest(deltas)
+    kg_ref = _oracle(dis, eng.sources)
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+
+
+def test_ingest_into_sigma_baked_source_revalidates_selections():
+    """A planner-materialized DIS' flags σ-baked sources and skips the
+    join-parent re-select; ingesting RAW delta rows into such a source
+    must drop the flag (and replan), or a row violating the map's σ
+    selection would leak triples through child joins."""
+    from repro.core.transform import apply_mapsdi
+    spec = {
+        "sources": {
+            "g": {"attrs": ["k", "v", "sp"], "records": [
+                {"k": "k1", "v": "o1", "sp": "HUMAN"},
+                {"k": "k2", "v": "o2", "sp": "MOUSE"},
+                {"k": "k3", "v": "o3", "sp": "HUMAN"}]},
+            "h": {"attrs": ["k", "w"], "records": [
+                {"k": "k1", "w": "b1"}, {"k": "k2", "w": "b2"},
+                {"k": "k3", "w": "b3"}]},
+        },
+        "maps": [
+            {"name": "parent", "source": "g",
+             "subject": {"template": "http://ex/P/{k}"},
+             "poms": [{"predicate": "ex:v", "object": {"reference": "v"}}],
+             "selections": [{"attr": "sp", "eq": "HUMAN"}]},
+            {"name": "child", "source": "h",
+             "subject": {"template": "http://ex/C/{w}"},
+             "poms": [{"predicate": "ex:j",
+                       "object": {"parentTriplesMap": "parent",
+                                  "joinCondition": {"child": "k",
+                                                    "parent": "k"}}}]},
+        ],
+    }
+    dis2, _ = apply_mapsdi(parse_dis(spec))
+    parent_src = dis2.map_by_name("parent").source
+    assert parent_src in dis2.sigma_baked
+    eng = KGEngine(dis2)
+    kg0, _stats = eng.create_kg()
+    assert int(kg0.count) == 2 + 2   # 2 HUMAN literals + 2 join triples
+    # raw delta row VIOLATING the selection (sp=MOUSE) joining child k2
+    attrs = eng.sources[parent_src].attrs
+    delta = Table.from_records(
+        [{"k": "k2", "v": "oX", "sp": "MOUSE"}], attrs, eng.vocab)
+    kg, stats = eng.ingest({parent_src: delta})
+    assert parent_src not in eng._dis.sigma_baked   # flag dropped
+    assert int(kg.count) == int(kg0.count)          # no leaked join triple
+    acc = dis2.copy()
+    acc.sources = dict(eng.sources)
+    acc.sigma_baked = set()                         # honest oracle
+    kg_ref, _ = RDFizer(acc, "sdm")()
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+
+
+def test_ingest_unknown_source_raises_without_mutating():
+    dis = make_group_b_dis(16, 0.5, seed=10)
+    eng = KGEngine(dis)
+    n_before = int(eng.sources["gene"].count)
+    good = Table.from_codes(dis.sources["gene"].to_codes()[:2],
+                            dis.sources["gene"].attrs)
+    with pytest.raises(KeyError):
+        eng.ingest({"gene": good, "nope": Table.empty(("x",), 8)})
+    # the whole batch is validated up front: nothing was appended
+    assert int(eng.sources["gene"].count) == n_before
+    assert eng.stats()["ingests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# bound-mode annotation
+# ---------------------------------------------------------------------------
+
+def test_bound_annotation_reads_no_data():
+    from repro.core.transform import plan_mapsdi
+    from repro.plan.annotate import annotate
+    from repro.plan.ir import Scan, iter_nodes
+    dis = make_group_b_dis(64, 0.5, seed=11)
+    plan = plan_mapsdi(dis)
+    with forbid_transfers():        # bound mode: zero device->host syncs
+        counts, caps = annotate(plan, mode="bound", slack=1.5)
+    for node in counts:
+        if isinstance(node, Scan):
+            assert counts[node] == dis.sources[node.source].capacity
+        assert caps[node] >= counts[node]
+
+
+def test_bound_mode_engine_matches_exact():
+    mk = lambda: make_group_b_dis(72, 0.6, seed=12)  # noqa: E731
+    kg_e, _ = KGEngine(mk(), mode="exact").create_kg()
+    kg_b, stats = KGEngine(mk(), mode="bound", slack=1.0).create_kg()
+    np.testing.assert_array_equal(kg_b.to_codes(), kg_e.to_codes())
+
+
+# ---------------------------------------------------------------------------
+# distributed sink: the session reuses the cached collective closure
+# ---------------------------------------------------------------------------
+
+def test_mesh_sink_reuses_cached_collective_closure():
+    from repro.core.distributed import repartition_trace_count
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
+    dis = make_group_b_dis(96, 0.6, seed=13)
+    eng = KGEngine(dis, mesh=mesh)
+    kg, _ = eng.create_kg()
+    kg_ref = _oracle(dis, eng.sources)
+    assert kg.row_set() == kg_ref.row_set()
+    traces0 = repartition_trace_count()
+    delta_src = make_group_b_dis(8, 0.5, seed=130)
+    for b in range(2):              # same-bucket ingests: zero re-traces
+        kg, _stats = eng.ingest(
+            {"gene": _reencode(delta_src, "gene", eng.vocab,
+                               dis.sources["gene"].attrs)})
+    assert repartition_trace_count() == traces0
+    assert kg.row_set() == _oracle(dis, eng.sources).row_set()
+
+
+# ---------------------------------------------------------------------------
+# session stats
+# ---------------------------------------------------------------------------
+
+def test_session_stats_counters():
+    dis = make_group_b_dis(48, 0.5, seed=14)
+    eng = KGEngine(dis)
+    eng.create_kg()
+    eng.run()
+    st = eng.stats()
+    assert st["executions"] == 2
+    assert st["ingests"] == 0
+    assert st["engine"] == "sdm" and st["mode"] == "exact"
+    assert st["plan_cache_hits"] + st["plan_cache_misses"] == 2
+    assert set(st["source_buckets"]) == {"gene", "chrom"}
+    assert all(cap % 8 == 0 for cap in st["source_buckets"].values())

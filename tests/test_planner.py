@@ -232,6 +232,59 @@ def test_selection_pushdown_skips_join_parent_object_filters():
     assert int(parent_src.count) == 2
 
 
+def _sigma_parent_join_spec():
+    """Join whose parent map carries an explicit σ selection."""
+    return {
+        "sources": {
+            "g": {"attrs": ["k", "v", "sp"], "records": [
+                {"k": "k1", "v": "o1", "sp": "HUMAN"},
+                {"k": "k2", "v": "o2", "sp": "MOUSE"},
+                {"k": "k3", "v": "o3", "sp": "HUMAN"}]},
+            "h": {"attrs": ["k", "w"], "records": [
+                {"k": "k1", "w": "b1"}, {"k": "k2", "w": "b2"},
+                {"k": "k3", "w": "b3"}]},
+        },
+        "maps": [
+            {"name": "parent", "source": "g",
+             "subject": {"template": "http://ex/P/{k}"},
+             "poms": [{"predicate": "ex:v", "object": {"reference": "v"}}],
+             "selections": [{"attr": "sp", "eq": "HUMAN"}]},
+            {"name": "child", "source": "h",
+             "subject": {"template": "http://ex/C/{w}"},
+             "poms": [{"predicate": "ex:j",
+                       "object": {"parentTriplesMap": "parent",
+                                  "joinCondition": {"child": "k",
+                                                    "parent": "k"}}}]},
+        ],
+    }
+
+
+def test_sigma_baked_provenance_skips_parent_reselect():
+    """Planner-materialized DIS' bakes σ into the extension and flags it, so
+    re-planning skips the (idempotent) parent re-select; the eager DIS'
+    never bakes σ and must keep it. Same KG on both paths (ROADMAP item)."""
+    from repro.plan import Select
+    kg0, _ = rdfize(parse_dis(_sigma_parent_join_spec()))
+    assert int(kg0.count) == 2 + 2   # 2 HUMAN parent literals + 2 joins
+
+    dis_p, _ = apply_mapsdi(parse_dis(_sigma_parent_join_spec()))
+    parent_src = dis_p.map_by_name("parent").source
+    assert parent_src in dis_p.sigma_baked
+    plan_p = lower(dis_p)
+    join = plan_p.join_node(plan_p.map_by_name("child"), 0)
+    assert not any(isinstance(n, Select) for n in iter_nodes(join.right))
+    kg_p, _ = rdfize(dis_p)
+    np.testing.assert_array_equal(kg_p.to_codes(), kg0.to_codes())
+
+    dis_e, _ = apply_mapsdi_eager(parse_dis(_sigma_parent_join_spec()))
+    assert not dis_e.sigma_baked    # eager materialization: σ NOT baked
+    plan_e = lower(dis_e)
+    join_e = plan_e.join_node(plan_e.map_by_name("child"), 0)
+    assert any(isinstance(n, Select) for n in iter_nodes(join_e.right))
+    kg_e, _ = rdfize(dis_e)
+    np.testing.assert_array_equal(kg_e.to_codes(), kg0.to_codes())
+
+
 # ---------------------------------------------------------------------------
 # common-subplan elimination
 # ---------------------------------------------------------------------------
