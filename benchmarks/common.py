@@ -15,13 +15,19 @@ OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                        "experiments", "bench")
 
 
-def timeit(fn: Callable, *, repeats: int = 1) -> float:
-    """Best-of-N wall time in seconds (first call may include compile)."""
+def timeit(fn: Callable, *, repeats: int = 1, inner: int = 1) -> float:
+    """Best-of-N wall time in seconds (first call may include compile).
+
+    ``inner`` runs the function that many times per sample and divides —
+    the per-call jitter amortization for millisecond-scale calls whose
+    single-shot timings are dominated by scheduling noise (the regression
+    gate keys on such timings)."""
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
+        for _ in range(inner):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / inner)
     return best
 
 

@@ -14,11 +14,15 @@ amortization literal:
                 within-bucket appends re-execute the cached closure with
                 zero re-trace (triples/sec + recompile counts reported).
 
-Two hard correctness gates run in every invocation (including ``--smoke``):
-an out-of-capacity extension (16× the seed) must produce the bit-exact KG
-of a fresh run over the accumulated sources with exactly one recompile,
-and the distributed shard_map δ path must reuse the session's cached
-collective closure (trace-count guard).
+Three hard correctness gates run in every invocation (including
+``--smoke``): an out-of-capacity extension (16× the seed) must produce the
+bit-exact KG of a fresh run over the accumulated sources with exactly one
+recompile; the distributed shard_map δ path must reuse the session's
+cached collective closure (trace-count guard); and the fused mesh closure
+(``config="distributed_fused"``, over ALL available devices — 8 on the CI
+multi-device leg) must run with zero host gathers of intermediate triples
+(``forbid_transfers`` passes around the closure) while producing the
+bit-identical KG of the single-device planned path.
 
 Run: ``PYTHONPATH=src python -m benchmarks.engine [--smoke]``
 Artifacts: ``experiments/bench/engine.json``.
@@ -29,6 +33,7 @@ import argparse
 import time
 from typing import Dict, List
 
+import jax
 import numpy as np
 
 from repro.api import KGEngine, clear_plan_cache, plan_cache_stats
@@ -38,7 +43,7 @@ from repro.core.rdfizer import RDFizer
 from repro.data.synthetic import (make_group_b_dis,
                                   make_group_b_extension_records)
 from repro.launch.mesh import make_mesh
-from repro.relalg import Table, host_int
+from repro.relalg import Table, forbid_transfers, host_int
 
 from .common import print_csv, save_rows, timeit
 
@@ -71,10 +76,13 @@ def bench_cold_vs_cached(n_rows: int, engine: str, dedup: str,
     assert stats_c["plan_cache_hit"], "second one-shot call missed the cache"
     assert np.array_equal(kg_c.to_codes(), kg_cold.to_codes())
 
-    # steady state: re-execution of one session's cached closure
+    # steady state: re-execution of one session's cached closure (best-of-N
+    # even in --smoke — the regression gate keys on this, and a single
+    # measurement of a millisecond-scale call is too noisy to gate on)
     session = KGEngine(mk(), engine=engine, dedup=dedup)
     session.create_kg()
-    steady_s = timeit(lambda: session.run(), repeats=repeats)
+    steady_s = timeit(lambda: session.run(), repeats=max(3, repeats),
+                      inner=10)
 
     kg_triples = int(host_int(kg_cold.count))
     row = {
@@ -87,6 +95,7 @@ def bench_cold_vs_cached(n_rows: int, engine: str, dedup: str,
         "speedup_steady": round(cold_s / max(steady_s, 1e-9), 2),
         "cold_triples_per_s": round(kg_triples / max(cold_s, 1e-9)),
         "cached_triples_per_s": round(kg_triples / max(cached_s, 1e-9)),
+        "steady_triples_per_s": round(kg_triples / max(steady_s, 1e-9)),
     }
     # acceptance gate: cached re-execution >= 10x faster than cold
     assert cached_s * 10 <= cold_s, \
@@ -171,6 +180,38 @@ def check_distributed_closure_reuse(n_rows: int, dedup: str
             "kg_triples": stats["kg_triples"], "sink_traces": traces}
 
 
+def check_fused_mesh_device_resident(n_rows: int, engine: str, dedup: str,
+                                     repeats: int) -> Dict[str, object]:
+    """Acceptance gate: the fused mesh closure never gathers intermediate
+    triples to host — ``forbid_transfers`` passes around the closure (input
+    shard blocks and the final-KG read happen outside it) — and the KG it
+    produces is bit-identical to the single-device planned path. Runs over
+    ALL available devices, so the CI multi-device leg exercises the real
+    collectives."""
+    n_dev = jax.device_count()
+    mesh = make_mesh((n_dev,), ("data",))
+    mk = lambda: make_group_b_dis(n_rows, 0.6, seed=0)  # noqa: E731
+    kg_single, _ = KGEngine(mk(), engine=engine, dedup=dedup).create_kg()
+    session = KGEngine(mk(), engine=engine, dedup=dedup, mesh=mesh)
+    kg_mesh, stats = session.create_kg()
+    assert np.array_equal(kg_mesh.to_codes(), kg_single.to_codes()), \
+        "fused mesh KG differs from the single-device planned path"
+    entry = session._last["entry"]
+    datas, counts = session._shard_sources(session.sources, entry.cap_locals)
+    with forbid_transfers():   # zero host gathers of intermediate triples
+        jax.block_until_ready(entry.fn(datas, counts))
+    steady_s = timeit(lambda: jax.block_until_ready(entry.fn(datas, counts)),
+                      repeats=max(3, repeats), inner=10)
+    kg_triples = stats["kg_triples"]
+    return {"config": "distributed_fused", "rows": 2 * n_rows,
+            "engine": engine, "dedup": dedup, "devices": n_dev,
+            "kg_triples": kg_triples,
+            "steady_s": round(steady_s, 5),
+            "triples_per_s": round(kg_triples / max(steady_s, 1e-9)),
+            "host_transfers_in_closure": 0,
+            "bitwise_equal_single_device": True}
+
+
 def run(scale: float = 1.0, engine: str = "sdm", dedup: str = "hash",
         repeats: int = 3) -> List[Dict]:
     n = max(32, int(4000 * scale))
@@ -180,6 +221,8 @@ def run(scale: float = 1.0, engine: str = "sdm", dedup: str = "hash",
                      batch_rows=max(4, n // 16)),
         check_overflow_recompile(max(16, n // 4), engine, dedup),
         check_distributed_closure_reuse(max(16, n // 4), dedup),
+        check_fused_mesh_device_resident(max(16, n // 4), engine, dedup,
+                                         repeats),
     ]
     rows.append({"config": "plan_cache", **plan_cache_stats()})
     return rows

@@ -1,0 +1,151 @@
+"""CI bench-regression gate: fail on >Nx throughput regressions.
+
+Compares the bench-smoke artifacts just produced (``--current``) against a
+reference — preferably the previous successful ``main`` run's artifact
+(``--previous``, downloaded by CI when one exists), falling back to the
+baselines committed in git (``--baseline``, snapshotted by CI *before* the
+smoke run overwrites ``experiments/bench/``).
+
+Watched metrics (the two headline throughputs of the session API — both
+best-of-N steady-state timings; one-shot latencies like ``cached_s`` carry
+too much same-machine noise to gate on):
+
+* ``engine.json`` ``config=group_b``          → ``steady_triples_per_s``
+  (cached-plan re-execution — the plan-cache amortization claim)
+* ``engine.json`` ``config=distributed_fused`` → ``triples_per_s``
+  (the fused device-resident mesh path)
+
+A metric fails when ``current < reference / threshold`` (default 2.0 —
+"regresses more than 2x") against the **previous main artifact** — the
+same runner class, so the comparison is meaningful. Committed-baseline
+comparisons only warn: those numbers come from whatever machine produced
+the commit, and a cross-machine 2x is noise, not signal — this is the
+soft-fail on the first run (and whenever no previous artifact exists).
+Missing references soft-pass entirely, and a reference row whose
+``devices`` field differs from the current row's is ignored — the CI
+matrix legs (1 vs 8 virtual devices) each compare only against their own
+artifact lineage.
+
+Run: ``python -m benchmarks.regression_gate --current experiments/bench \
+       --baseline /tmp/bench-baseline [--previous /tmp/bench-prev]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# (file stem, row "config" value, metric key) — higher is better
+METRICS: List[Tuple[str, str, str]] = [
+    ("engine", "group_b", "steady_triples_per_s"),
+    ("engine", "distributed_fused", "triples_per_s"),
+]
+
+
+def load_row(root: Optional[str], stem: str, config: str,
+             key: str) -> Optional[Dict]:
+    """The first row carrying the metric from ``root/stem.json``, or None."""
+    if not root:
+        return None
+    path = os.path.join(root, f"{stem}.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, ValueError):
+        return None
+    for row in rows:
+        if isinstance(row, dict) and row.get("config") == config \
+                and key in row:
+            return row
+    return None
+
+
+def metric_value(row: Optional[Dict], key: str) -> Optional[float]:
+    if row is None:
+        return None
+    try:
+        return float(row[key])
+    except (TypeError, ValueError, KeyError):
+        return None
+
+
+def comparable(cur: Dict, ref: Optional[Dict]) -> bool:
+    """A reference only counts when it measured the same thing: the device
+    count must match (the distributed throughput differs by orders of
+    magnitude between the 1-device and 8-virtual-device CI legs, and both
+    legs share one committed baseline file)."""
+    if ref is None:
+        return False
+    if "devices" in cur and "devices" in ref \
+            and cur["devices"] != ref["devices"]:
+        return False
+    return True
+
+
+def find_reference(cur: Dict, stem: str, config: str, key: str,
+                   previous: Optional[str], baseline: Optional[str]
+                   ) -> Tuple[Optional[float], str]:
+    prev = load_row(previous, stem, config, key)
+    if comparable(cur, prev):
+        return metric_value(prev, key), "previous main artifact"
+    base = load_row(baseline, stem, config, key)
+    if comparable(cur, base):
+        return metric_value(base, key), "committed baseline"
+    return None, "none"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=os.path.join("experiments", "bench"))
+    ap.add_argument("--baseline", default=None,
+                    help="snapshot of the committed experiments/bench")
+    ap.add_argument("--previous", default=None,
+                    help="downloaded bench artifact of the last main run")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when current < reference / threshold")
+    args = ap.parse_args(argv)
+
+    failures: List[str] = []
+    for stem, config, key in METRICS:
+        label = f"{stem}.json[{config}].{key}"
+        cur_row = load_row(args.current, stem, config, key)
+        cur = metric_value(cur_row, key)
+        if cur is None:
+            print(f"[gate] WARN {label}: missing from current run "
+                  "(soft-pass)")
+            continue
+        ref, origin = find_reference(cur_row, stem, config, key,
+                                     args.previous, args.baseline)
+        if ref is None or ref <= 0:
+            print(f"[gate] WARN {label}: no reference (first run?) — "
+                  f"current={cur:.0f} (soft-pass)")
+            continue
+        ratio = cur / ref
+        regressed = cur * args.threshold < ref
+        hard = origin == "previous main artifact"
+        verdict = ("FAIL" if regressed and hard
+                   else "WARN" if regressed else "ok")
+        print(f"[gate] {verdict} {label}: current={cur:.0f} vs "
+              f"{origin}={ref:.0f} ({ratio:.2f}x)"
+              + (" (cross-machine baseline: soft)" if regressed and not hard
+                 else ""))
+        if verdict == "FAIL":
+            failures.append(
+                f"{label} regressed {1 / max(ratio, 1e-9):.1f}x "
+                f"(current {cur:.0f} < {origin} {ref:.0f} / "
+                f"{args.threshold})")
+    if failures:
+        print("[gate] bench regression gate FAILED:")
+        for f in failures:
+            print(f"[gate]   - {f}")
+        return 1
+    print("[gate] bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,7 +33,16 @@ from repro.plan.ir import Node
 @dataclasses.dataclass
 class CachedPlan:
     """One compiled execution plan: the jitted closure plus everything the
-    session needs to report stats without re-planning."""
+    session needs to report stats without re-planning.
+
+    Mesh entries (``compile_mesh_plan`` closures) additionally carry the
+    shard layout the closure was traced for: ``cap_locals`` (per-source
+    per-shard row-block capacity — part of the cache key, so a source
+    crossing its shard-local bucket gets a fresh closure), ``out_cap_local``
+    (per-shard capacity of the returned KG block, what ``unshard_rows``
+    needs) and ``sink_slack`` (the fused sink δ's bucket headroom; grown on
+    bucket overflow). ``caps``/``counts`` for mesh entries are the
+    shard-local capacities / global counts of ``annotate_local``."""
 
     key: Tuple
     plan: object                 # repro.plan.lower.LogicalPlan
@@ -45,6 +54,9 @@ class CachedPlan:
     dedup: Optional[str]
     mode: str
     build_seconds: float = 0.0
+    cap_locals: Optional[Dict[str, int]] = None   # mesh: per-shard source caps
+    out_cap_local: Optional[int] = None           # mesh: per-shard KG capacity
+    sink_slack: float = 1.0                       # mesh: sink δ bucket slack
 
 
 class PlanCache:

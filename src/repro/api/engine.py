@@ -25,11 +25,18 @@ Three mechanisms (see ``docs/engine.md``):
   :func:`repro.relalg.bucket_cap`); the closure reports a truncation flag,
   and the engine transparently recompiles into the next capacity bucket
   and re-runs, counting ``recompiles``. The KG is never silently wrong.
-* **Distributed path unified** — with a ``mesh``, the per-map pipeline
-  runs in the same cached closure (compiled without the sink δ) and the
-  global duplicate elimination goes through the *session-cached*
-  shard_map repartition closure (``repro.core.distributed``), reused
-  across ingests within a bucket.
+* **Fully device-resident distributed plans** — with a ``mesh``, the
+  WHOLE pipeline (Scan over shard-local row blocks, π/σ/δ, ⋈ with
+  gathered parents, semantification, and the global sink δ as a fused
+  hash-repartition collective) runs inside one ``shard_map`` closure
+  (:func:`repro.plan.mesh.compile_mesh_plan`). Intermediate triples never
+  touch the host: the engine shards the session sources once per ingest,
+  re-executes the cached mesh closure, and only reads back the final
+  deduplicated KG. Capacities are annotated *per shard*
+  (:func:`repro.plan.annotate.annotate_local`) and the cache key extends
+  to (mesh shape, axis, device ids, per-source shard-local capacity
+  bucket), so recompile-on-overflow and bucket-crossing ingests work
+  exactly as on one device.
 """
 from __future__ import annotations
 
@@ -38,15 +45,17 @@ from typing import Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.rdfizer import RDFizer
-from repro.core.schema import DIS
+from repro.core.schema import DIS, TRIPLE_ATTRS
 from repro.core.transform import TransformStats, plan_mapsdi
-from repro.plan.annotate import annotate
+from repro.plan.annotate import annotate, annotate_local
 from repro.plan.compile import compile_plan, input_names
 from repro.plan.ir import fingerprint
 from repro.plan.lower import LogicalPlan, lower
-from repro.relalg import PAD_ID, Table, append_rows, bucket_cap, host_int
+from repro.relalg import (PAD_ID, Table, append_rows, bucket_cap, distinct,
+                          host_int)
 
 from .cache import PLAN_CACHE, CachedPlan
 
@@ -109,9 +118,12 @@ class KGEngine:
         Multiplier on annotated counts before bucketing — headroom that
         absorbs extension growth without recompiling.
     mesh / mesh_axis
-        When given, the sink duplicate elimination runs distributed
-        (shard_map hash-repartition δ) via the session-cached collective
-        closure; the per-map pipeline still runs in the fused plan closure.
+        When given, the whole plan — per-map pipeline AND the global sink
+        δ — compiles into one mesh-resident ``shard_map`` closure over
+        row-sharded sources (:func:`repro.plan.mesh.compile_mesh_plan`);
+        intermediate triples never leave the devices, and only the final
+        deduplicated KG is gathered back (then canonically re-ordered so
+        the output is bit-identical to the single-device path).
     """
 
     def __init__(self, dis: DIS, engine: str = "sdm",
@@ -151,6 +163,15 @@ class KGEngine:
         self._ir_fp = fingerprint(self._plan.emits())
         self._emit_sig = _emitter_signature(self._emitter)
         self._plan_seconds = time.perf_counter() - t0
+        # mesh sessions keep the sharded source blocks device-resident
+        # between runs, keyed by the source Table object's identity — any
+        # replacement (ingest's append_rows, direct assignment) re-shards
+        self._shard_cache: Dict[str, Tuple] = {}
+        self._scan_names_cache: Optional[Tuple[str, ...]] = None
+        # the mesh's identity is fixed for the session: key prefix once
+        self._mesh_static = None if mesh is None else (
+            tuple(mesh.shape.items()), mesh_axis,
+            tuple(int(d.id) for d in np.asarray(mesh.devices).flat))
         self._have_plan = False     # a closure has been obtained (any way)
         self._recompiles = 0        # compiles beyond the session's first
         self._executions = 0
@@ -171,9 +192,38 @@ class KGEngine:
             (name, t.capacity, tuple(t.attrs), bucket_cap(host_int(t.count)))
             for name, t in sources.items()))
 
+    def _cap_locals(self, sources: Mapping[str, Table]) -> Dict[str, int]:
+        """Per-shard row-block capacity bucket per scanned source — the
+        shard-local analogue of the source capacity bucket, and part of
+        the mesh cache key (a source crossing its shard-local bucket must
+        get a freshly-shaped closure)."""
+        n = int(self.mesh.shape[self.mesh_axis])
+        return {name: bucket_cap(-(-sources[name].capacity // n))
+                for name in self._scan_names}
+
+    @property
+    def _scan_names(self) -> Tuple[str, ...]:
+        """Source names the current plan scans — static per plan, cached
+        so the per-run cache-key computation never re-walks the IR DAG."""
+        if self._scan_names_cache is None:
+            from repro.plan.mesh import plan_scans
+            self._scan_names_cache = tuple(sorted(plan_scans(self._plan)))
+        return self._scan_names_cache
+
+    def _mesh_sig(self, sources: Mapping[str, Table]) -> Optional[Tuple]:
+        """Mesh part of the cache key: shape, axis, device ids (static,
+        computed once), per-source shard-local capacity bucket, and the
+        u16-packability of the vocab (baked into the fused sink's
+        all_to_all payload)."""
+        if self.mesh is None:
+            return None
+        return self._mesh_static + (
+            tuple(sorted(self._cap_locals(sources).items())),
+            len(self._dis.vocab) < (1 << 16))
+
     def _key(self, sources: Mapping[str, Table]) -> Tuple:
         return (self._ir_fp, self._emit_sig, self.engine, self.dedup,
-                self.mode, self.slack, self.jit, self.mesh is None,
+                self.mode, self.slack, self.jit, self._mesh_sig(sources),
                 self._source_sig(sources))
 
     def _replan(self) -> None:
@@ -184,6 +234,7 @@ class KGEngine:
         self._plan = (plan_mapsdi(self._dis) if self.optimize
                       else lower(self._dis))
         self._ir_fp = fingerprint(self._plan.emits())
+        self._scan_names_cache = None   # the new plan may scan differently
         self._plan_seconds += time.perf_counter() - t0
 
     def _slim_plan(self):
@@ -200,22 +251,49 @@ class KGEngine:
 
     def _build(self, key: Tuple, sources: Mapping[str, Table],
                mode: Optional[str] = None,
-               floor_caps: Optional[Mapping] = None) -> CachedPlan:
+               floor_caps: Optional[Mapping] = None,
+               sink_slack: float = 1.0) -> CachedPlan:
         t0 = time.perf_counter()
-        counts, caps = annotate(self._plan, mode=mode or self.mode,
-                                slack=self.slack, cap_fn=bucket_cap,
-                                sources=sources)
-        if floor_caps:  # growth must be monotone or overflow could ping-pong
-            caps = {n: max(c, floor_caps.get(n, 0)) for n, c in caps.items()}
         plan = self._slim_plan()
-        fn = compile_plan(plan, self._emitter, engine=self.engine,
-                          dedup=self.dedup, caps=caps, jit=self.jit,
-                          report_overflow=True, sink=self.mesh is None)
-        entry = CachedPlan(key=key, plan=plan, emitter=self._emitter,
-                           counts=counts, caps=caps, fn=fn,
-                           engine=self.engine, dedup=self.dedup,
-                           mode=mode or self.mode,
-                           build_seconds=time.perf_counter() - t0)
+        if self.mesh is None:
+            counts, caps = annotate(self._plan, mode=mode or self.mode,
+                                    slack=self.slack, cap_fn=bucket_cap,
+                                    sources=sources)
+            if floor_caps:  # growth must be monotone or overflow ping-pongs
+                caps = {n: max(c, floor_caps.get(n, 0))
+                        for n, c in caps.items()}
+            fn = compile_plan(plan, self._emitter, engine=self.engine,
+                              dedup=self.dedup, caps=caps, jit=self.jit,
+                              report_overflow=True)
+            entry = CachedPlan(key=key, plan=plan, emitter=self._emitter,
+                               counts=counts, caps=caps, fn=fn,
+                               engine=self.engine, dedup=self.dedup,
+                               mode=mode or self.mode,
+                               build_seconds=time.perf_counter() - t0)
+        else:
+            from repro.plan.mesh import compile_mesh_plan
+            n = int(self.mesh.shape[self.mesh_axis])
+            cap_locals = self._cap_locals(sources)
+            counts, caps = annotate_local(
+                self._plan, n_shards=n, cap_locals=cap_locals,
+                mode=mode or self.mode, slack=self.slack,
+                cap_fn=bucket_cap, sources=sources)
+            if floor_caps:
+                caps = {n_: max(c, floor_caps.get(n_, 0))
+                        for n_, c in caps.items()}
+            fn, out_cap_local = compile_mesh_plan(
+                plan, self._emitter, self.mesh, self.mesh_axis,
+                engine=self.engine, dedup=self.dedup, caps=caps,
+                cap_locals=cap_locals, sink_slack=sink_slack,
+                pack_u16=len(self._dis.vocab) < (1 << 16), jit=self.jit)
+            entry = CachedPlan(key=key, plan=plan, emitter=self._emitter,
+                               counts=counts, caps=caps, fn=fn,
+                               engine=self.engine, dedup=self.dedup,
+                               mode=mode or self.mode,
+                               build_seconds=time.perf_counter() - t0,
+                               cap_locals=cap_locals,
+                               out_cap_local=out_cap_local,
+                               sink_slack=sink_slack)
         PLAN_CACHE.put(key, entry)
         if self._have_plan:
             self._recompiles += 1
@@ -245,20 +323,21 @@ class KGEngine:
         entry, hit = self._ensure(sources)
         plan_s = time.perf_counter() - t0
         t1 = time.perf_counter()
-        kg, raw, over = entry.fn(sources)
-        if host_int(over):
-            # some buffer was truncated: re-annotate exactly against the
-            # *current* extension, grow caps monotonically, re-run — the
-            # one recompile per capacity-bucket crossing
-            hit = False   # the hit did not actually serve this execution
-            entry = self._build(entry.key, sources, mode="exact",
-                                floor_caps=entry.caps)
-            kg, raw, over = entry.fn(sources)
-            if host_int(over):  # exact caps cannot under-size
-                raise RuntimeError("capacity overflow persisted after "
-                                   "recompile — please report")
         if self.mesh is not None:
-            kg = self._distributed_sink(kg)
+            kg, raw, entry, hit = self._run_mesh(entry, sources, hit)
+        else:
+            kg, raw, over = entry.fn(sources)
+            if host_int(over):
+                # some buffer was truncated: re-annotate exactly against the
+                # *current* extension, grow caps monotonically, re-run — the
+                # one recompile per capacity-bucket crossing
+                hit = False   # the hit did not actually serve this execution
+                entry = self._build(entry.key, sources, mode="exact",
+                                    floor_caps=entry.caps)
+                kg, raw, over = entry.fn(sources)
+                if host_int(over):  # exact caps cannot under-size
+                    raise RuntimeError("capacity overflow persisted after "
+                                       "recompile — please report")
         exec_s = time.perf_counter() - t1
         self._executions += 1
         self._last = {"entry": entry, "cache_hit": hit, "first": first,
@@ -311,23 +390,76 @@ class KGEngine:
         for name, delta in deltas.items():
             self.sources[name] = append_rows(self.sources[name], delta)
             self._ingested_rows += host_int(delta.count)
+        # (the appended rows are fresh Table objects, which invalidates the
+        # identity-keyed device-resident shard blocks — and, via the cache
+        # key's shard-local capacity buckets, any cached closure whose
+        # per-shard annotations a grown source outran)
         self._ingests += 1
         kg, raw = self.run()
         return kg, self._run_stats(kg, raw)
 
-    # -- distributed sink ----------------------------------------------------
-    def _distributed_sink(self, triples: Table) -> Table:
-        from repro.core.distributed import distributed_distinct_table
-        n_shards = self.mesh.shape[self.mesh_axis]
-        cap_local = bucket_cap(-(-triples.capacity // n_shards))
-        pack = len(self._dis.vocab) < (1 << 16)
-        for slack in (1.0, 4.0):   # bucket-overflow retry with more slack
-            kg, overflow = distributed_distinct_table(
-                triples, self.mesh, self.mesh_axis, slack=slack,
-                dedup=self.dedup, pack_u16=pack, cap_local=cap_local)
-            if not overflow:
-                return kg
-        raise RuntimeError("distributed δ bucket overflow at slack=4")
+    # -- fused distributed execution -----------------------------------------
+    def _shard_sources(self, sources: Mapping[str, Table],
+                       cap_locals: Mapping[str, int]) -> Tuple[Dict, Dict]:
+        """Row-shard the scanned sources onto the mesh (the input
+        distribution step — the one place source rows cross the host
+        boundary). Session sources are cached device-side keyed on the
+        Table object's identity, so any replacement — an ingest's
+        ``append_rows`` or a direct ``engine.sources[name] = ...`` — and
+        any shard-bucket growth re-shards, while untouched sources reuse
+        their resident blocks."""
+        from repro.core.distributed import shard_table
+        own = sources is self.sources
+        datas: Dict[str, jax.Array] = {}
+        counts: Dict[str, jax.Array] = {}
+        for name in sorted(cap_locals):
+            cap, table = cap_locals[name], sources[name]
+            if own:
+                hit = self._shard_cache.get(name)
+                if hit is not None and hit[0] == cap and hit[1] is table:
+                    datas[name], counts[name] = hit[2], hit[3]
+                    continue
+            d, c, _ = shard_table(table, self.mesh, self.mesh_axis,
+                                  cap_local=cap)
+            if own:
+                self._shard_cache[name] = (cap, table, d, c)
+            datas[name], counts[name] = d, c
+        return datas, counts
+
+    def _run_mesh(self, entry: CachedPlan, sources: Mapping[str, Table],
+                  hit: bool):
+        """Execute the fused mesh closure: shard inputs, run on device,
+        recompile on (shard-local) capacity overflow or sink-δ bucket
+        overflow, gather ONLY the final deduplicated KG and canonicalize
+        its row order (one δ over the result — both paths end in the same
+        δ kernel, so the output is bit-identical to the single-device
+        plan)."""
+        from repro.core.distributed import unshard_rows
+        datas, counts = self._shard_sources(sources, entry.cap_locals)
+        kg_d, kg_c, raw, over, sink_over = entry.fn(datas, counts)
+        for _ in range(2):   # ≤1 capacity recompile + ≤1 sink-slack growth
+            grow_caps, grow_sink = host_int(over), host_int(sink_over)
+            if not (grow_caps or grow_sink):
+                break
+            hit = False   # the hit did not actually serve this execution
+            # floors are ALWAYS the current entry's caps (growth must be
+            # monotone or overflow ping-pongs), and a sink-only rebuild
+            # must keep the mode a previous capacity rebuild escalated to
+            entry = self._build(
+                entry.key, sources,
+                mode="exact" if grow_caps else entry.mode,
+                floor_caps=entry.caps,
+                sink_slack=entry.sink_slack * (4.0 if grow_sink else 1.0))
+            kg_d, kg_c, raw, over, sink_over = entry.fn(datas, counts)
+        if host_int(over):   # exact shard-local caps cannot under-size
+            raise RuntimeError("mesh capacity overflow persisted after "
+                               "recompile — please report")
+        if host_int(sink_over):
+            raise RuntimeError("distributed δ bucket overflow at "
+                               f"slack={entry.sink_slack:g}")
+        rows = unshard_rows(kg_d, kg_c, entry.out_cap_local)   # final KG only
+        kg = distinct(Table.from_codes(rows, TRIPLE_ATTRS), dedup=self.dedup)
+        return kg, raw, entry, hit
 
     # -- stats ---------------------------------------------------------------
     @property

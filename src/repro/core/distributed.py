@@ -102,13 +102,22 @@ def unpack_u16_pairs(packed: jax.Array, k: int) -> jax.Array:
     return out[:, :k]
 
 
-def _repartition_distinct_body(data: jax.Array, count: jax.Array, *,
+def repartition_distinct_local(data: jax.Array, count: jax.Array, *,
                                axis: str, n_shards: int, cap_bucket: int,
-                               use_pallas: Optional[bool],
+                               use_pallas: Optional[bool] = None,
                                pack_u16: bool = False,
                                dedup: Optional[str] = None
                                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Per-shard body: local δ -> hash partition -> all_to_all -> local δ.
+
+    The reusable plan-level global-δ primitive: callable from *inside* any
+    ``shard_map`` body over ``axis`` — both :func:`make_repartition_distinct`
+    (the standalone collective closure) and the fused mesh plan compiler
+    (:func:`repro.plan.mesh.compile_mesh_plan`, where it runs as the plan's
+    sink instead of a host-side post-pass) consume it. Takes this shard's
+    ``data [cap_local, k]`` / scalar ``count`` and returns
+    ``(data [n_shards * cap_bucket, k], count [1], overflow [1])`` — the
+    globally-deduplicated rows that hash to this shard.
 
     Both local δ passes go through :func:`repro.relalg.ops.dedup_rows`, so
     the single-device and distributed paths share one implementation and one
@@ -171,6 +180,19 @@ def repartition_trace_count() -> int:
     return _TRACE_COUNTS["repartition"]
 
 
+def sink_bucket_cap(cap_local: int, n_shards: int, slack: float = 1.0) -> int:
+    """Per-target-shard bucket capacity for the hash repartition.
+
+    A Poisson tail bound: a mixing hash spreads rows ~uniformly, so bucket
+    occupancy ≈ Poisson(m) with ``m = cap_local / n_shards``, and
+    ``m + 6·sqrt(m) + 8`` bounds the max bucket far tighter than a blanket
+    2× at large m. ``slack`` multiplies the bound; overflow is still
+    detected and flagged for a re-run. Shared by the standalone collective
+    closure and the fused mesh-plan sink."""
+    m = cap_local / n_shards
+    return max(8, int(np.ceil((m + 6.0 * np.sqrt(m) + 8) * slack)))
+
+
 def _closure_key(mesh: Mesh, axis: str, cap_local: int, k: int, slack: float,
                  use_pallas: Optional[bool], pack_u16: bool,
                  dedup: Optional[str]) -> Tuple:
@@ -215,10 +237,9 @@ def make_repartition_distinct(mesh: Mesh, axis: str, cap_local: int, k: int,
             _CLOSURE_CACHE.move_to_end(key)
             return hit
     n_shards = mesh.shape[axis]
-    m = cap_local / n_shards
-    cap_bucket = max(8, int(np.ceil((m + 6.0 * np.sqrt(m) + 8) * slack)))
+    cap_bucket = sink_bucket_cap(cap_local, n_shards, slack)
 
-    body = functools.partial(_repartition_distinct_body, axis=axis,
+    body = functools.partial(repartition_distinct_local, axis=axis,
                              n_shards=n_shards, cap_bucket=cap_bucket,
                              use_pallas=use_pallas, pack_u16=pack_u16,
                              dedup=dedup)

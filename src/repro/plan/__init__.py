@@ -13,17 +13,19 @@ from .ir import (Distinct, EmitTriples, EquiJoin, Node, Pred, Project, Scan,
 from .lower import LogicalPlan, lower, selection_preds
 from .optimize import (PlanStats, cse, merge_maps, optimize,
                        push_projections, push_selections)
-from .annotate import annotate
+from .annotate import annotate, annotate_local
 from .compile import (compile_plan, execute_node, input_names,
                       materialize_plan)
+from .mesh import compile_mesh_plan, plan_scans
 from .explain import dump_plan, explain
 
 __all__ = [
     "Distinct", "EmitTriples", "EquiJoin", "LogicalPlan", "Node",
     "PlanStats", "Pred", "Project", "Scan", "Select", "Union", "annotate",
-    "compile_plan", "cse", "dump_plan", "execute_node", "explain",
+    "annotate_local", "compile_mesh_plan", "compile_plan", "cse",
+    "dump_plan", "execute_node", "explain",
     "fingerprint", "input_names", "intern", "iter_nodes", "lower",
     "make_select",
-    "materialize_plan", "merge_maps", "optimize", "push_projections",
-    "push_selections", "selection_preds", "tree_size",
+    "materialize_plan", "merge_maps", "optimize", "plan_scans",
+    "push_projections", "push_selections", "selection_preds", "tree_size",
 ]

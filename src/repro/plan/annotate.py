@@ -173,6 +173,66 @@ def annotate(plan: LogicalPlan, mode: str = "exact", slack: float = 1.0,
     return counts, caps
 
 
+def annotate_local(plan: LogicalPlan, n_shards: int,
+                   cap_locals: Mapping[str, int], mode: str = "exact",
+                   slack: float = 1.0,
+                   cap_fn: Callable[[int], int] = round_cap,
+                   sources: Optional[Mapping[str, Table]] = None,
+                   ) -> Tuple[Dict[Node, int], Dict[Node, int]]:
+    """Shard-local (counts, capacities) for the fused mesh closure.
+
+    The fused distributed plan (:mod:`repro.plan.mesh`) runs every node on
+    *per-shard row blocks*: a Scan sees at most ``cap_locals[source]`` rows,
+    and every downstream buffer only needs to hold that shard's slice. This
+    sizes those buffers:
+
+    * ``counts`` are the GLOBAL counts of :func:`annotate` (exact or bound
+      mode) — what the engine's Table-1-style stats report.
+    * ``caps[node]`` are SHARD-LOCAL: ``min(global count, structural local
+      bound)`` where the local bound walks the subtree with Scans clamped
+      to ``cap_locals`` (π/σ/δ bounded by their child, ∪ by the sum).
+
+    Both terms of the min are true per-shard bounds in ``"exact"`` mode: a
+    shard's slice of any relation node is a sub-multiset of the global
+    relation (Scans partition rows; shard-local δ keeps at most one copy of
+    each globally-distinct row). An ⋈'s output is bounded by the *global*
+    exact match total because the fused plan all_gathers + deduplicates the
+    parent side — each shard joins its (duplicate-free slice of the) child
+    rows against the full parent relation, so its matches are a subset of
+    the global matches. In ``"bound"`` mode the ⋈ keeps the FK heuristic
+    (shard-local left + global right) and the runtime overflow flag +
+    recompile-on-overflow covers the gap, exactly as on one device.
+    """
+    counts, _ = annotate(plan, mode=mode, slack=slack, cap_fn=cap_fn,
+                         sources=sources)
+    lmemo: Dict[Node, int] = {}
+
+    def local_bound(node: Node) -> int:
+        hit = lmemo.get(node)
+        if hit is not None:
+            return hit
+        if isinstance(node, Scan):
+            out = int(cap_locals[node.source])
+        elif isinstance(node, (Project, Select, Distinct)):
+            out = local_bound(node.children()[0])
+        elif isinstance(node, Union):
+            out = sum(local_bound(c) for c in node.inputs)
+        else:
+            raise TypeError(f"not a relation node: {type(node).__name__}")
+        lmemo[node] = out
+        return out
+
+    caps: Dict[Node, int] = {}
+    for node, c in counts.items():
+        if isinstance(node, EquiJoin):
+            local = c if mode == "exact" else \
+                min(c, local_bound(node.left) + counts[node.right])
+        else:
+            local = min(c, local_bound(node))
+        caps[node] = cap_fn(int(math.ceil(local * slack)))
+    return counts, caps
+
+
 def _relation_nodes(root: Node):
     stack, seen = [root], set()
     while stack:

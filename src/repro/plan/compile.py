@@ -61,13 +61,21 @@ def execute_node(node: Node, sources: Mapping[str, Table],
                  memo: Dict[Node, Table], emitter=None,
                  dedup: Optional[str] = None,
                  caps: Optional[Mapping[Node, int]] = None,
-                 overflow: Optional[List[jax.Array]] = None) -> Table:
+                 overflow: Optional[List[jax.Array]] = None, *,
+                 join_gather=None) -> Table:
     """Evaluate one DAG node (and, via ``memo``, each shared subtree once).
 
     When ``overflow`` is a list, every capped operator appends a scalar
     bool flag — "this node needed more rows than its plan-time capacity and
     was truncated" — exactly once per unique node. ``KGEngine`` reduces the
     flags to its recompile-on-overflow signal.
+
+    ``join_gather`` is the mesh hook: when given, every ⋈ *parent* relation
+    passes through ``join_gather(right_node, right_table)`` before the join.
+    The fused distributed plan uses it to all_gather the (shard-local)
+    parent rows so a row-sharded child joins against the full parent
+    relation (see :mod:`repro.plan.mesh`); single-device execution leaves
+    it ``None`` (identity).
     """
     hit = memo.get(node)
     if hit is not None:
@@ -77,11 +85,11 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         out = sources[node.source]
     elif isinstance(node, Project):
         child = execute_node(node.child, sources, memo, emitter, dedup, caps,
-                             overflow)
+                             overflow, join_gather=join_gather)
         out = project_as(child, list(node.spec))
     elif isinstance(node, Select):
         child = execute_node(node.child, sources, memo, emitter, dedup, caps,
-                             overflow)
+                             overflow, join_gather=join_gather)
         sel = select_mask(child, _pred_mask(child, node.preds))
         cap = caps.get(node)
         if overflow is not None and cap is not None:
@@ -89,7 +97,7 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         out = _fit(sel, cap)
     elif isinstance(node, Distinct):
         child = execute_node(node.child, sources, memo, emitter, dedup, caps,
-                             overflow)
+                             overflow, join_gather=join_gather)
         dd = distinct(child, dedup=dedup)
         cap = caps.get(node)
         if overflow is not None and cap is not None:
@@ -97,7 +105,7 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         out = _fit(dd, cap)
     elif isinstance(node, Union):
         parts = [execute_node(c, sources, memo, emitter, dedup, caps,
-                              overflow)
+                              overflow, join_gather=join_gather)
                  for c in node.inputs]
         aligned = [parts[0]] + [project(p, parts[0].attrs) for p in parts[1:]]
         data = jnp.concatenate([_masked_data(p) for p in aligned], axis=0)
@@ -106,9 +114,11 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         out = Table(data=data, count=count, attrs=parts[0].attrs)
     elif isinstance(node, EquiJoin):
         left = execute_node(node.left, sources, memo, emitter, dedup, caps,
-                            overflow)
+                            overflow, join_gather=join_gather)
         right = execute_node(node.right, sources, memo, emitter, dedup, caps,
-                             overflow)
+                             overflow, join_gather=join_gather)
+        if join_gather is not None:
+            right = join_gather(node.right, right)
         cap = caps.get(node, round_cap(left.capacity * 4))
         out, total = equi_join(left, right, node.left_key, node.right_key,
                                out_capacity=cap,
@@ -119,9 +129,9 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         if emitter is None:
             raise ValueError("EmitTriples node needs an emitter")
         table = execute_node(node.input, sources, memo, emitter, dedup, caps,
-                             overflow)
+                             overflow, join_gather=join_gather)
         joins = {i: execute_node(j, sources, memo, emitter, dedup, caps,
-                                 overflow)
+                                 overflow, join_gather=join_gather)
                  for i, j in node.joins}
         out = emitter.emit_triples(node.tm, table, joins)
     else:
@@ -133,7 +143,7 @@ def execute_node(node: Node, sources: Mapping[str, Table],
 def compile_plan(plan: LogicalPlan, emitter, engine: str = "rmlmapper",
                  dedup: Optional[str] = None,
                  caps: Optional[Mapping[Node, int]] = None, jit: bool = True,
-                 report_overflow: bool = False, sink: bool = True):
+                 report_overflow: bool = False):
     """Lower the DAG to one ``sources -> (kg, raw)`` closure (jitted by
     default). Mirrors the engine semantics: ``"sdm"`` deduplicates each
     map's output as it is produced, ``"rmlmapper"`` only at the sink; the
@@ -149,14 +159,12 @@ def compile_plan(plan: LogicalPlan, emitter, engine: str = "rmlmapper",
     of silently truncating: re-plan (or let the engine recompile) when it
     fires.
 
-    ``sink=False`` stops before the sink δ and returns the compacted union
-    of the per-map outputs (per-map δ still applied under ``"sdm"``) — the
-    input the distributed shard_map global-δ path consumes.
-
     The engine/sink semantics below (per-map δ under sdm, δδ = δ for a
     single map, sink δ) must stay in lockstep with
     :meth:`LogicalPlan.sink`, which is what ``dump_plan``/``explain``
-    display."""
+    display. The distributed sibling is
+    :func:`repro.plan.mesh.compile_mesh_plan` (same DAG, one shard_map
+    body, the sink δ fused as a repartition collective)."""
     emit_nodes = plan.emits()
 
     def fn(sources: Mapping[str, Table]):
@@ -176,13 +184,13 @@ def compile_plan(plan: LogicalPlan, emitter, engine: str = "rmlmapper",
                     else jnp.zeros((), dtype=bool))
             return kg, raw, over
 
-        if sink and engine == "sdm" and len(per_map) == 1:
+        if engine == "sdm" and len(per_map) == 1:
             return done(per_map[0])     # δδ = δ: per-map δ IS the sink δ
         data = jnp.concatenate([t.data for t in per_map], axis=0)
         mask = jnp.concatenate([t.valid_mask for t in per_map])
         data, count = compact(data, mask)
         merged = Table(data=data, count=count, attrs=per_map[0].attrs)
-        return done(distinct(merged, dedup=dedup) if sink else merged)
+        return done(distinct(merged, dedup=dedup))
 
     return jax.jit(fn) if jit else fn
 

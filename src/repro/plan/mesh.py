@@ -1,0 +1,178 @@
+"""Fused distributed execution: the whole plan inside one ``shard_map``.
+
+``compile_mesh_plan`` is the mesh-aware sibling of
+:func:`repro.plan.compile.compile_plan`: it lowers the optimized DAG to ONE
+jitted closure whose body runs entirely inside a ``shard_map`` over row-
+sharded sources — Scan reads this shard's row block, π/σ/δ/∪ run on the
+block, every ⋈ all_gathers (and deduplicates) the parent side so a sharded
+child joins against the full parent relation, ``EmitTriples`` semantifies
+the shard's rows, and the global sink δ is the fused
+:func:`repro.core.distributed.repartition_distinct_local` collective
+(local δ → rowhash partition → all_to_all → local δ) instead of a
+gather-to-host post-pass. A distributed ``KGEngine.create_kg()``/
+``.ingest()`` therefore never materializes intermediate triples on the
+host: the only host reads are the overflow flags and the final
+(already-deduplicated) KG rows.
+
+Semantics versus the single-device plan:
+
+* The KG row *set* is identical; the engine canonicalizes row order with
+  one final δ over the gathered result, making the output bit-identical to
+  :func:`compile_plan`'s (both paths end in the same δ kernel, whose output
+  order depends only on the row set).
+* Interior δ nodes (and the sdm per-map δ) deduplicate *per shard* —
+  cross-shard duplicates survive until the global sink δ, so the mesh
+  ``raw`` count is an upper bound on the single-device ``raw``.
+* Gathered ⋈ parents are deduplicated after the all_gather (shard-local δ
+  cannot see cross-shard copies). This keeps the exact-mode global join
+  total a true per-shard output bound — the invariant
+  :func:`repro.plan.annotate.annotate_local` relies on — and moves
+  already-minimized rows over the network, Rule 1 applied to the ICI.
+
+Buffers are sized by SHARD-LOCAL capacities (``caps`` from
+``annotate_local``); every capped node still reports a truncation flag and
+the sink reports its bucket-overflow flag, so ``KGEngine``'s
+recompile-on-overflow works per shard exactly as on one device.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.distributed import repartition_distinct_local, sink_bucket_cap
+from repro.relalg import PAD_ID, Table, distinct
+from repro.relalg.ops import _masked_data, compact, dedup_rows
+
+from .compile import execute_node
+from .ir import Node, Scan, iter_nodes
+from .lower import LogicalPlan
+
+
+def plan_scans(plan: LogicalPlan) -> Dict[str, Scan]:
+    """The Scan node per source name reachable from the plan's emits —
+    the sources the mesh closure must receive as sharded row blocks."""
+    scans: Dict[str, Scan] = {}
+    for emit in plan.emits():
+        for node in iter_nodes(emit):
+            if isinstance(node, Scan):
+                scans[node.source] = node
+    return scans
+
+
+def gather_table(table: Table, axis: str, n_shards: int,
+                 dedup: Optional[str] = None) -> Table:
+    """All_gather a shard-local table into the full (replicated) relation.
+
+    Concatenates every shard's valid rows, compacts, and deduplicates —
+    shard-local δ cannot remove copies of a row living on two shards, and
+    the join-capacity bound (see :func:`repro.plan.annotate.annotate_local`)
+    needs the gathered parent side duplicate-free. Must run inside a
+    ``shard_map`` body over ``axis``.
+    """
+    cap_local = table.capacity
+    gdata = lax.all_gather(_masked_data(table), axis, axis=0, tiled=True)
+    gcounts = lax.all_gather(table.count, axis)          # [n_shards]
+    idx = jnp.arange(n_shards * cap_local, dtype=jnp.int32)
+    valid = (idx % cap_local) < gcounts[idx // cap_local]
+    data, count = compact(jnp.where(valid[:, None], gdata, jnp.int32(PAD_ID)),
+                          valid)
+    data, count = dedup_rows(data, count, dedup)
+    return Table(data=data, count=count, attrs=table.attrs)
+
+
+def compile_mesh_plan(plan: LogicalPlan, emitter, mesh, axis: str,
+                      engine: str = "rmlmapper", dedup: Optional[str] = None,
+                      caps: Optional[Mapping[Node, int]] = None,
+                      cap_locals: Optional[Mapping[str, int]] = None,
+                      sink_slack: float = 1.0, pack_u16: bool = False,
+                      jit: bool = True):
+    """Lower the DAG to one mesh-resident closure; returns
+    ``(run, out_cap_local)``.
+
+    ``run(datas, counts)`` takes the sharded sources —
+    ``datas[name] [n_shards * cap_locals[name], k]`` placed ``P(axis,
+    None)`` and ``counts[name] [n_shards]`` placed ``P(axis)`` (see
+    :func:`repro.core.distributed.shard_table`) — and returns
+    ``(kg_data, kg_counts, raw, overflowed, sink_overflowed)`` where
+    ``kg_data [n_shards * out_cap_local, 5]`` / ``kg_counts [n_shards]``
+    hold the globally-deduplicated KG still sharded over ``axis``, ``raw``
+    is the total triple count before the sink δ (per-shard semantics — see
+    the module docstring), ``overflowed`` is the any-shard any-node
+    capacity-truncation flag and ``sink_overflowed`` the repartition
+    bucket-overflow flag (re-run with more ``sink_slack``).
+
+    ``caps`` are SHARD-LOCAL node capacities (``annotate_local``);
+    ``pack_u16`` asserts every dictionary code fits 16 bits so the sink's
+    all_to_all moves ceil(5/2) words per triple.
+    """
+    n_shards = int(mesh.shape[axis])
+    emit_nodes = plan.emits()
+    scans = plan_scans(plan)
+    cap_locals = {name: int(cap_locals[name]) for name in scans}
+
+    def body(datas: Dict[str, jax.Array], counts: Dict[str, jax.Array]):
+        sources = {name: Table(data=datas[name],
+                               count=counts[name].reshape(()),
+                               attrs=scan.scan_attrs)
+                   for name, scan in scans.items()}
+        gathered: Dict[Node, Table] = {}
+
+        def join_gather(right_node: Node, right: Table) -> Table:
+            hit = gathered.get(right_node)
+            if hit is None:
+                hit = gathered[right_node] = gather_table(
+                    right, axis, n_shards, dedup)
+            return hit
+
+        memo: Dict[Node, Table] = {}
+        flags = []
+        per_map = [execute_node(e, sources, memo, emitter, dedup, caps,
+                                flags, join_gather=join_gather)
+                   for e in emit_nodes]
+        if engine == "sdm":
+            per_map = [distinct(t, dedup=dedup) for t in per_map]
+        raw = jnp.sum(jnp.stack([t.count for t in per_map]))
+
+        data = jnp.concatenate([_masked_data(t) for t in per_map], axis=0)
+        mask = jnp.concatenate([t.valid_mask for t in per_map])
+        data, count = compact(data, mask)
+        # the fused sink δ: this shard's triples repartitioned by rowhash so
+        # one local δ per shard is globally correct — no host round-trip
+        cap_bucket = sink_bucket_cap(data.shape[0], n_shards, sink_slack)
+        kg_data, kg_count, sink_over = repartition_distinct_local(
+            data, count, axis=axis, n_shards=n_shards, cap_bucket=cap_bucket,
+            pack_u16=pack_u16, dedup=dedup)
+        over = (jnp.any(jnp.stack(flags)) if flags
+                else jnp.zeros((), dtype=bool))
+        return (kg_data, kg_count, raw.reshape(1), over.reshape(1),
+                sink_over)
+
+    specs_data = {name: P(axis, None) for name in scans}
+    specs_count = {name: P(axis) for name in scans}
+    fn = shard_map(body, mesh=mesh, in_specs=(specs_data, specs_count),
+                   out_specs=(P(axis, None), P(axis), P(axis), P(axis),
+                              P(axis)))
+
+    def run(datas: Dict[str, jax.Array], counts: Dict[str, jax.Array]):
+        kg_data, kg_counts, raw, over, sink_over = fn(datas, counts)
+        return (kg_data, kg_counts, jnp.sum(raw), jnp.any(over),
+                jnp.any(sink_over))
+
+    if jit:
+        run = jax.jit(run)
+
+    abstract = (
+        {name: jax.ShapeDtypeStruct(
+            (n_shards * cap_locals[name], len(scans[name].scan_attrs)),
+            jnp.int32) for name in scans},
+        {name: jax.ShapeDtypeStruct((n_shards,), jnp.int32)
+         for name in scans},
+    )
+    out_shape = jax.eval_shape(run, *abstract)[0]
+    out_cap_local = out_shape.shape[0] // n_shards
+    return run, out_cap_local

@@ -195,6 +195,9 @@ def test_deprecated_entry_points_warn_once():
 def test_mapsdi_create_kg_stats_report_cache_and_recompiles():
     """Satellite: the one-shot stats expose the session counters, and a
     cache-hit run skips (and stops counting) annotation + compilation."""
+    from repro.api import clear_plan_cache
+    clear_plan_cache()   # another test's structurally-identical DIS (the
+    # cache is structural by design) must not pre-seed the miss we assert
     mk = lambda: make_group_a_dis(n_rows=48, redundancy=0.5, seed=23)
     kg1, s1 = mapsdi_create_kg(mk())
     kg2, s2 = mapsdi_create_kg(mk())
