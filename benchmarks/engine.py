@@ -37,6 +37,7 @@ import jax
 import numpy as np
 
 from repro.api import KGEngine, clear_plan_cache, plan_cache_stats
+from repro.core import parse_dis
 from repro.core.distributed import repartition_trace_count
 from repro.core.pipeline import mapsdi_create_kg
 from repro.core.rdfizer import RDFizer
@@ -212,6 +213,117 @@ def check_fused_mesh_device_resident(n_rows: int, engine: str, dedup: str,
             "bitwise_equal_single_device": True}
 
 
+def _join_heavy_dis(n_child: int, n_parent: int, seed: int = 0):
+    """A join-heavy config with a LARGE parent relative to the child —
+    the regime where the all_gather ⋈ exchange hits the ICI wall and
+    hash-repartition wins (Iglesias et al. 2022's big-source bottleneck).
+    Parent rows are mostly distinct (near-unique keys AND values) so
+    pre-processing cannot shrink the gathered side and the join fan-out
+    stays bounded."""
+    rng = np.random.default_rng(seed)
+    keys = [f"K{i}" for i in range(max(8, n_parent // 2))]
+    child = [{"ID": int(i), "k": str(keys[rng.integers(0, len(keys))]),
+              "v": f"v{i}"} for i in range(n_child)]
+    parent = [{"ID": int(i), "k": str(keys[rng.integers(0, len(keys))]),
+               "p": f"p{i}"} for i in range(n_parent)]
+    return parse_dis({
+        "sources": {
+            "child": {"attrs": ["ID", "k", "v"], "records": child},
+            "parent": {"attrs": ["ID", "k", "p"], "records": parent}},
+        "maps": [
+            {"name": "M1", "source": "child",
+             "subject": {"template": "http://ex/C/{v}", "class": "ex:C"},
+             "poms": [{"predicate": "ex:rel",
+                       "object": {"parentTriplesMap": "M2",
+                                  "joinCondition": {"child": "k",
+                                                    "parent": "k"}}}]},
+            {"name": "M2", "source": "parent",
+             "subject": {"template": "http://ex/P/{p}", "class": "ex:P"},
+             "poms": []}]})
+
+
+def _auto_choices(session: KGEngine):
+    return sorted({x.strategy
+                   for x in session._last["entry"].exchanges.values()})
+
+
+def check_join_exchange_crossover(n_rows: int, engine: str, dedup: str,
+                                  repeats: int) -> List[Dict]:
+    """Acceptance gates for the cost-modeled ⋈ exchange + the crossover
+    measurement shipped in the bench artifact:
+
+    * the large-parent config runs under ``join_exchange="repartition"``
+      with ZERO host transfers inside the fused closure and produces the
+      ``to_codes()``-bit-identical KG of both the gather strategy and the
+      single-device planned path;
+    * ``auto`` picks repartition on the large-parent config (with >1
+      device) while keeping gather on the small-parent group-B config;
+    * steady-state seconds for gather vs repartition land in the artifact
+      (the repartition-vs-gather crossover on this machine/mesh).
+    """
+    n_dev = jax.device_count()
+    mesh = make_mesh((n_dev,), ("data",))
+    # the parent must be genuinely large: the cost model's crossover sits
+    # near COLLECTIVE_LAUNCH_S · ICI_BW ≈ 100 KiB of gathered parent bytes
+    # per device (~a few thousand rows per shard)
+    n_child, n_parent = max(32, n_rows // 2), max(1 << 14, 8 * n_rows)
+    big = lambda: _join_heavy_dis(n_child, n_parent)  # noqa: E731
+    kg_single, _ = KGEngine(big(), engine=engine, dedup=dedup).create_kg()
+    rows: List[Dict] = []
+    steady: Dict[str, float] = {}
+    kg_by_strategy = {}
+    for strategy in ("gather", "repartition"):
+        session = KGEngine(big(), engine=engine, dedup=dedup, mesh=mesh,
+                           join_exchange=strategy)
+        kg, stats = session.create_kg()
+        assert np.array_equal(kg.to_codes(), kg_single.to_codes()), \
+            f"{strategy} KG differs from the single-device planned path"
+        kg_by_strategy[strategy] = kg
+        entry = session._last["entry"]
+        datas, counts = session._shard_sources(session.sources,
+                                               entry.cap_locals)
+        with forbid_transfers():   # device-resident incl. the ⋈ exchange
+            jax.block_until_ready(entry.fn(datas, counts))
+        steady[strategy] = timeit(
+            lambda: jax.block_until_ready(entry.fn(datas, counts)),
+            repeats=max(3, repeats), inner=10)
+        rows.append({
+            "config": f"join_exchange_{strategy}", "engine": engine,
+            "dedup": dedup, "devices": n_dev,
+            "child_rows": n_child, "parent_rows": n_parent,
+            "kg_triples": stats["kg_triples"],
+            "steady_s": round(steady[strategy], 5),
+            "triples_per_s": round(stats["kg_triples"]
+                                   / max(steady[strategy], 1e-9)),
+            "host_transfers_in_closure": 0,
+            "bitwise_equal_single_device": True})
+    assert np.array_equal(kg_by_strategy["gather"].to_codes(),
+                          kg_by_strategy["repartition"].to_codes())
+
+    auto_big = KGEngine(big(), engine=engine, dedup=dedup, mesh=mesh,
+                        join_exchange="auto")
+    auto_big.create_kg()
+    big_choice = _auto_choices(auto_big)
+    assert big_choice == (["repartition"] if n_dev > 1 else ["gather"]), \
+        f"auto chose {big_choice} on the large-parent config ({n_dev} dev)"
+    # fixed smoke-sized group-B (small parent): auto must keep gathering
+    auto_small = KGEngine(make_group_b_dis(80, 0.6, seed=0), engine=engine,
+                          dedup=dedup, mesh=mesh, join_exchange="auto")
+    auto_small.create_kg()
+    small_choice = _auto_choices(auto_small)
+    assert small_choice == ["gather"], \
+        f"auto chose {small_choice} on the small-parent group-B config"
+    rows.append({
+        "config": "join_exchange_auto", "engine": engine, "dedup": dedup,
+        "devices": n_dev, "large_parent_choice": big_choice[0],
+        "group_b_choice": small_choice[0],
+        "gather_steady_s": round(steady["gather"], 5),
+        "repartition_steady_s": round(steady["repartition"], 5),
+        "repartition_speedup": round(steady["gather"]
+                                     / max(steady["repartition"], 1e-9), 3)})
+    return rows
+
+
 def run(scale: float = 1.0, engine: str = "sdm", dedup: str = "hash",
         repeats: int = 3) -> List[Dict]:
     n = max(32, int(4000 * scale))
@@ -224,6 +336,7 @@ def run(scale: float = 1.0, engine: str = "sdm", dedup: str = "hash",
         check_fused_mesh_device_resident(max(16, n // 4), engine, dedup,
                                          repeats),
     ]
+    rows.extend(check_join_exchange_crossover(n, engine, dedup, repeats))
     rows.append({"config": "plan_cache", **plan_cache_stats()})
     return rows
 

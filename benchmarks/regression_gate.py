@@ -6,7 +6,7 @@ reference — preferably the previous successful ``main`` run's artifact
 baselines committed in git (``--baseline``, snapshotted by CI *before* the
 smoke run overwrites ``experiments/bench/``).
 
-Watched metrics (the two headline throughputs of the session API — both
+Watched metrics (the headline throughputs of the session API — all
 best-of-N steady-state timings; one-shot latencies like ``cached_s`` carry
 too much same-machine noise to gate on):
 
@@ -14,6 +14,8 @@ too much same-machine noise to gate on):
   (cached-plan re-execution — the plan-cache amortization claim)
 * ``engine.json`` ``config=distributed_fused`` → ``triples_per_s``
   (the fused device-resident mesh path)
+* ``engine.json`` ``config=join_exchange_repartition`` → ``triples_per_s``
+  (the repartition-by-join-key ⋈ exchange on the large-parent config)
 
 A metric fails when ``current < reference / threshold`` (default 2.0 —
 "regresses more than 2x") against the **previous main artifact** — the
@@ -41,6 +43,9 @@ from typing import Dict, List, Optional, Tuple
 METRICS: List[Tuple[str, str, str]] = [
     ("engine", "group_b", "steady_triples_per_s"),
     ("engine", "distributed_fused", "triples_per_s"),
+    # the repartition ⋈ exchange on the large-parent config (the path that
+    # scales past the all_gather wall — see docs/engine.md §4)
+    ("engine", "join_exchange_repartition", "triples_per_s"),
 ]
 
 

@@ -40,9 +40,14 @@ class CachedPlan:
     per-shard row-block capacity — part of the cache key, so a source
     crossing its shard-local bucket gets a fresh closure), ``out_cap_local``
     (per-shard capacity of the returned KG block, what ``unshard_rows``
-    needs) and ``sink_slack`` (the fused sink δ's bucket headroom; grown on
-    bucket overflow). ``caps``/``counts`` for mesh entries are the
-    shard-local capacities / global counts of ``annotate_local``."""
+    needs), ``sink_slack`` (the fused sink δ's bucket headroom; grown on
+    bucket overflow), ``exchanges`` (the resolved per-⋈
+    :class:`repro.plan.annotate.JoinExchange` decisions the closure was
+    compiled with — what ``explain`` and the bench gates inspect) and
+    ``safe_exchange`` (True after an overflow recompile escalated every
+    exchange bucket/post-exchange cap to its hard-safe bound).
+    ``caps``/``counts`` for mesh entries are the shard-local capacities /
+    global counts of ``annotate_local``."""
 
     key: Tuple
     plan: object                 # repro.plan.lower.LogicalPlan
@@ -57,6 +62,8 @@ class CachedPlan:
     cap_locals: Optional[Dict[str, int]] = None   # mesh: per-shard source caps
     out_cap_local: Optional[int] = None           # mesh: per-shard KG capacity
     sink_slack: float = 1.0                       # mesh: sink δ bucket slack
+    exchanges: Optional[Dict[Node, object]] = None  # mesh: per-⋈ decisions
+    safe_exchange: bool = False                   # mesh: hard-safe buckets
 
 
 class PlanCache:

@@ -124,16 +124,33 @@ class KGEngine:
         intermediate triples never leave the devices, and only the final
         deduplicated KG is gathered back (then canonically re-ordered so
         the output is bit-identical to the single-device path).
+    join_exchange
+        ⋈ exchange strategy inside the fused mesh closure (ignored without
+        a mesh): ``"gather"`` all_gathers the parent side to every shard,
+        ``"repartition"`` hash-partitions both sides by join key with one
+        ``all_to_all`` each, ``"auto"`` (default) lets the per-join cost
+        model pick whichever moves fewer estimated wire bytes
+        (:func:`repro.plan.annotate.join_exchange_cost`). All three
+        produce bit-identical KGs; the knob is part of the plan-cache key.
+        ``"auto"`` decisions are resolved at compile time from the
+        plan-time counts, so they re-resolve on every capacity-bucket
+        crossing.
     """
 
     def __init__(self, dis: DIS, engine: str = "sdm",
                  dedup: Optional[str] = None, *, optimize: bool = True,
                  mode: str = "exact", slack: float = 1.0, mesh=None,
-                 mesh_axis: str = "data", jit: bool = True):
+                 mesh_axis: str = "data", jit: bool = True,
+                 join_exchange: str = "auto"):
+        from repro.plan.annotate import JOIN_EXCHANGES
         if engine not in ("rmlmapper", "sdm"):
             raise ValueError(f"unknown engine {engine!r}")
         if mode not in ("exact", "bound"):
             raise ValueError(f"unknown annotate mode {mode!r}")
+        if join_exchange not in JOIN_EXCHANGES:
+            raise ValueError(f"unknown join exchange {join_exchange!r} "
+                             f"(expected one of {JOIN_EXCHANGES})")
+        self.join_exchange = join_exchange
         self.engine = engine
         self.dedup = dedup
         self.optimize = optimize
@@ -173,6 +190,11 @@ class KGEngine:
             tuple(mesh.shape.items()), mesh_axis,
             tuple(int(d.id) for d in np.asarray(mesh.devices).flat))
         self._have_plan = False     # a closure has been obtained (any way)
+        # sticky per-session escalation: once adversarial key/hash skew
+        # forced a safe-capacity rebuild, later builds (e.g. after a
+        # bucket-crossing ingest of the same skewed stream) start safe
+        # instead of re-paying a Poisson-then-safe double compile
+        self._safe_exchange = False
         self._recompiles = 0        # compiles beyond the session's first
         self._executions = 0
         self._ingests = 0
@@ -186,6 +208,32 @@ class KGEngine:
     def plan(self):
         """The optimized :class:`~repro.plan.lower.LogicalPlan`."""
         return self._plan
+
+    def explain(self) -> str:
+        """Annotated plan tree over the session's current sources. On a
+        mesh session every ⋈ line additionally shows the cost model's
+        exchange decision under the session's ``join_exchange`` knob plus
+        the estimated per-device wire bytes of both strategies. Once a
+        closure has been compiled, the tree renders the *compiled* entry's
+        counts/caps/exchanges — exactly what the cached closure was built
+        with (an ``"auto"`` decision near the crossover could otherwise
+        differ from a fresh estimate); before the first execution it
+        predicts with the session's own mode/slack/bucketing and sticky
+        safe-exchange state."""
+        from repro.plan.explain import dump_plan, explain as _explain
+        if self.mesh is None:
+            return _explain(self._plan, self.engine)
+        entry = self._last.get("entry") if self._last else None
+        if entry is not None and entry.exchanges is not None:
+            return dump_plan(self._plan, self.engine, entry.counts,
+                             entry.caps, entry.exchanges)
+        counts, caps, exchanges = annotate_local(
+            self._plan, n_shards=int(self.mesh.shape[self.mesh_axis]),
+            cap_locals=self._cap_locals(self.sources), mode=self.mode,
+            slack=self.slack, cap_fn=bucket_cap, sources=self.sources,
+            join_exchange=self.join_exchange,
+            safe_exchange=self._safe_exchange)
+        return dump_plan(self._plan, self.engine, counts, caps, exchanges)
 
     def _source_sig(self, sources: Mapping[str, Table]) -> Tuple:
         return tuple(sorted(
@@ -212,14 +260,17 @@ class KGEngine:
 
     def _mesh_sig(self, sources: Mapping[str, Table]) -> Optional[Tuple]:
         """Mesh part of the cache key: shape, axis, device ids (static,
-        computed once), per-source shard-local capacity bucket, and the
-        u16-packability of the vocab (baked into the fused sink's
-        all_to_all payload)."""
+        computed once), per-source shard-local capacity bucket, the
+        u16-packability of the vocab (baked into every exchange's
+        all_to_all payload), and the ⋈ exchange knob (different strategies
+        are different collective programs; ``"auto"``'s per-join
+        resolution is a build-time perf decision, so within-bucket count
+        drift never invalidates a cached closure)."""
         if self.mesh is None:
             return None
         return self._mesh_static + (
             tuple(sorted(self._cap_locals(sources).items())),
-            len(self._dis.vocab) < (1 << 16))
+            len(self._dis.vocab) < (1 << 16), self.join_exchange)
 
     def _key(self, sources: Mapping[str, Table]) -> Tuple:
         return (self._ir_fp, self._emit_sig, self.engine, self.dedup,
@@ -252,8 +303,11 @@ class KGEngine:
     def _build(self, key: Tuple, sources: Mapping[str, Table],
                mode: Optional[str] = None,
                floor_caps: Optional[Mapping] = None,
-               sink_slack: float = 1.0) -> CachedPlan:
+               sink_slack: float = 1.0,
+               safe_exchange: bool = False) -> CachedPlan:
         t0 = time.perf_counter()
+        safe_exchange = safe_exchange or self._safe_exchange
+        self._safe_exchange = safe_exchange
         plan = self._slim_plan()
         if self.mesh is None:
             counts, caps = annotate(self._plan, mode=mode or self.mode,
@@ -274,10 +328,12 @@ class KGEngine:
             from repro.plan.mesh import compile_mesh_plan
             n = int(self.mesh.shape[self.mesh_axis])
             cap_locals = self._cap_locals(sources)
-            counts, caps = annotate_local(
+            counts, caps, exchanges = annotate_local(
                 self._plan, n_shards=n, cap_locals=cap_locals,
                 mode=mode or self.mode, slack=self.slack,
-                cap_fn=bucket_cap, sources=sources)
+                cap_fn=bucket_cap, sources=sources,
+                join_exchange=self.join_exchange,
+                safe_exchange=safe_exchange)
             if floor_caps:
                 caps = {n_: max(c, floor_caps.get(n_, 0))
                         for n_, c in caps.items()}
@@ -285,7 +341,8 @@ class KGEngine:
                 plan, self._emitter, self.mesh, self.mesh_axis,
                 engine=self.engine, dedup=self.dedup, caps=caps,
                 cap_locals=cap_locals, sink_slack=sink_slack,
-                pack_u16=len(self._dis.vocab) < (1 << 16), jit=self.jit)
+                pack_u16=len(self._dis.vocab) < (1 << 16), jit=self.jit,
+                exchanges=exchanges, safe_exchange=safe_exchange)
             entry = CachedPlan(key=key, plan=plan, emitter=self._emitter,
                                counts=counts, caps=caps, fn=fn,
                                engine=self.engine, dedup=self.dedup,
@@ -293,7 +350,9 @@ class KGEngine:
                                build_seconds=time.perf_counter() - t0,
                                cap_locals=cap_locals,
                                out_cap_local=out_cap_local,
-                               sink_slack=sink_slack)
+                               sink_slack=sink_slack,
+                               exchanges=exchanges,
+                               safe_exchange=safe_exchange)
         PLAN_CACHE.put(key, entry)
         if self._have_plan:
             self._recompiles += 1
@@ -429,11 +488,11 @@ class KGEngine:
     def _run_mesh(self, entry: CachedPlan, sources: Mapping[str, Table],
                   hit: bool):
         """Execute the fused mesh closure: shard inputs, run on device,
-        recompile on (shard-local) capacity overflow or sink-δ bucket
-        overflow, gather ONLY the final deduplicated KG and canonicalize
-        its row order (one δ over the result — both paths end in the same
-        δ kernel, so the output is bit-identical to the single-device
-        plan)."""
+        recompile on (shard-local) capacity/exchange overflow or sink-δ
+        bucket overflow, gather ONLY the final deduplicated KG and
+        canonicalize its row order (one δ over the result — both paths end
+        in the same δ kernel, so the output is bit-identical to the
+        single-device plan)."""
         from repro.core.distributed import unshard_rows
         datas, counts = self._shard_sources(sources, entry.cap_locals)
         kg_d, kg_c, raw, over, sink_over = entry.fn(datas, counts)
@@ -444,12 +503,17 @@ class KGEngine:
             hit = False   # the hit did not actually serve this execution
             # floors are ALWAYS the current entry's caps (growth must be
             # monotone or overflow ping-pongs), and a sink-only rebuild
-            # must keep the mode a previous capacity rebuild escalated to
+            # must keep the mode a previous capacity rebuild escalated to.
+            # A capacity/exchange overflow escalates to safe_exchange:
+            # exact global counts as post-exchange caps and hard-safe
+            # exchange buckets (cap_bucket = cap_local) are true bounds
+            # even under adversarial key skew, so ONE recompile suffices.
             entry = self._build(
                 entry.key, sources,
                 mode="exact" if grow_caps else entry.mode,
                 floor_caps=entry.caps,
-                sink_slack=entry.sink_slack * (4.0 if grow_sink else 1.0))
+                sink_slack=entry.sink_slack * (4.0 if grow_sink else 1.0),
+                safe_exchange=bool(grow_caps) or entry.safe_exchange)
             kg_d, kg_c, raw, over, sink_over = entry.fn(datas, counts)
         if host_int(over):   # exact shard-local caps cannot under-size
             raise RuntimeError("mesh capacity overflow persisted after "
@@ -508,6 +572,7 @@ class KGEngine:
         out = {
             "engine": self.engine, "dedup": self.dedup, "mode": self.mode,
             "slack": self.slack, "optimize": self.optimize,
+            "join_exchange": self.join_exchange,
             "executions": self._executions, "ingests": self._ingests,
             "ingested_rows": self._ingested_rows,
             "recompiles": self._recompiles,

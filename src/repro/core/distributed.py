@@ -1,15 +1,26 @@
 """Scaled-up MapSDI: the paper's dedup lifted onto a TPU-pod mesh.
 
-Global duplicate elimination over row-sharded tables in one collective pass:
+The core primitive is :func:`repartition_by_key` — hash-partition a
+shard's rows on a column subset and exchange them with one ``all_to_all``
+so equal keys co-locate. Two consumers:
 
-    local δ  →  rowhash → hash-repartition (all_to_all)  →  local δ
+* **global duplicate elimination** (``key_cols=None``: the hash covers the
+  whole row) over row-sharded tables in one collective pass:
 
-Equal rows hash identically, so after repartition every duplicate group
-lives on exactly one shard and the second local distinct is globally
-correct. Crucially the *first* local distinct happens **before** the
-collective — projection/dedup pushdown applied to the network: the
-all_to_all moves already-minimized data (the same insight as Rule 1, with
-the ICI links playing the role of the RDFizer).
+      local δ  →  rowhash → hash-repartition (all_to_all)  →  local δ
+
+  Equal rows hash identically, so after repartition every duplicate group
+  lives on exactly one shard and the second local distinct is globally
+  correct. Crucially the *first* local distinct happens **before** the
+  collective — projection/dedup pushdown applied to the network: the
+  all_to_all moves already-minimized data (the same insight as Rule 1,
+  with the ICI links playing the role of the RDFizer).
+* **repartition-by-join-key ⋈ exchange** (``key_cols=(key,)``): both join
+  sides partitioned on the key so each shard joins only its key range —
+  the ``join_exchange="repartition"`` strategy of
+  :func:`repro.plan.mesh.compile_mesh_plan`, which wins over the
+  all_gather parent exchange when the parent side is large relative to
+  ICI bandwidth.
 
 Everything is fixed-shape: each shard holds ``cap_local`` rows, each
 outgoing bucket ``cap_bucket = ceil(cap_local * slack / n_shards)`` rows.
@@ -40,18 +51,24 @@ from repro.relalg.ops import compact, dedup_rows
 # ---------------------------------------------------------------------------
 
 def _partition_local(data: jax.Array, count: jax.Array, n_shards: int,
-                     cap_bucket: int, use_pallas: Optional[bool]
+                     cap_bucket: int, use_pallas: Optional[bool],
+                     key_cols: Optional[Tuple[int, ...]] = None
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Group this shard's valid rows into per-target-shard buckets.
 
-    Returns (buckets [n_shards, cap_bucket, K], bucket_counts [n_shards],
-    overflowed scalar bool).
+    The target shard is ``rowhash(row[key_cols]) % n_shards``
+    (``key_cols=None`` hashes the whole row — the global-δ partition);
+    hashing a *subset* is what repartitions a relation by join key, so
+    equal keys land on one shard. Returns (buckets
+    [n_shards, cap_bucket, K], bucket_counts [n_shards], overflowed scalar
+    bool).
     """
     cap_local, k = data.shape
     valid = jnp.arange(cap_local, dtype=jnp.int32) < count
     data = jnp.where(valid[:, None], data, jnp.int32(PAD_ID))
 
-    h = rowhash(data, use_pallas=use_pallas)
+    keyed = data if key_cols is None else data[:, jnp.asarray(key_cols)]
+    h = rowhash(keyed, use_pallas=use_pallas)
     target = jnp.where(valid, (h % jnp.uint32(n_shards)).astype(jnp.int32),
                        jnp.int32(n_shards))  # invalid rows -> sentinel bucket
 
@@ -102,38 +119,43 @@ def unpack_u16_pairs(packed: jax.Array, k: int) -> jax.Array:
     return out[:, :k]
 
 
-def repartition_distinct_local(data: jax.Array, count: jax.Array, *,
-                               axis: str, n_shards: int, cap_bucket: int,
-                               use_pallas: Optional[bool] = None,
-                               pack_u16: bool = False,
-                               dedup: Optional[str] = None
-                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Per-shard body: local δ -> hash partition -> all_to_all -> local δ.
+def repartition_by_key(data: jax.Array, count: jax.Array, *,
+                       axis: str, n_shards: int, cap_bucket: int,
+                       key_cols: Optional[Tuple[int, ...]] = None,
+                       use_pallas: Optional[bool] = None,
+                       pack_u16: bool = False
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Hash-repartition this shard's valid rows by ``key_cols``.
 
-    The reusable plan-level global-δ primitive: callable from *inside* any
-    ``shard_map`` body over ``axis`` — both :func:`make_repartition_distinct`
-    (the standalone collective closure) and the fused mesh plan compiler
-    (:func:`repro.plan.mesh.compile_mesh_plan`, where it runs as the plan's
-    sink instead of a host-side post-pass) consume it. Takes this shard's
-    ``data [cap_local, k]`` / scalar ``count`` and returns
-    ``(data [n_shards * cap_bucket, k], count [1], overflow [1])`` — the
-    globally-deduplicated rows that hash to this shard.
+    The reusable exchange primitive behind every mesh-plan collective:
+    callable from *inside* any ``shard_map`` body over ``axis``. Rows are
+    hashed on ``key_cols`` (``None`` = all columns), grouped into
+    per-target buckets of ``cap_bucket`` rows, exchanged with one
+    ``all_to_all``, and compacted. Takes this shard's ``data
+    [cap_local, k]`` / scalar ``count`` and returns ``(data
+    [n_shards * cap_bucket, k], count scalar, overflow scalar)`` — the rows
+    whose key hashes to this shard.
 
-    Both local δ passes go through :func:`repro.relalg.ops.dedup_rows`, so
-    the single-device and distributed paths share one implementation and one
-    ``dedup`` strategy ("lex" | "hash" | None = engine default).
+    Because equal keys land on one shard, a local δ afterwards is a global
+    δ when ``key_cols=None`` (every copy of a row shares its hash — the
+    :func:`repartition_distinct_local` sink), and a local ⋈ on the key
+    afterwards is exactly that shard's slice of the global ⋈ (the
+    ``join_exchange="repartition"`` strategy of
+    :func:`repro.plan.mesh.compile_mesh_plan`). ``overflow`` is True iff
+    some outgoing bucket exceeded ``cap_bucket`` and rows were dropped —
+    a *correctness* flag the caller must surface (the engine recompiles
+    with safe bucket capacities; ``cap_bucket >= cap_local`` can never
+    overflow, since a shard sends at most its own rows to one target).
     """
     _TRACE_COUNTS["repartition"] += 1  # trace-time side effect: each
-    # (re)trace of the shard body ticks the guard counter that tests and
-    # the engine benchmark use to assert closure reuse
+    # (re)trace of a shard body that exchanges rows ticks the guard counter
+    # tests and the engine benchmark use to assert closure reuse
     count = count.reshape(())
     k_cols = data.shape[1]
-    # 1. dedup BEFORE the collective (pushdown to the network)
-    data, count = dedup_rows(data, count, dedup, use_pallas=use_pallas)
-    # 2. bucket by row hash
+    # 1. bucket by key hash
     buckets, bcounts, overflow = _partition_local(
-        data, count, n_shards, cap_bucket, use_pallas)
-    # 3. exchange buckets; shard j receives every shard's bucket j
+        data, count, n_shards, cap_bucket, use_pallas, key_cols)
+    # 2. exchange buckets; shard j receives every shard's bucket j
     if pack_u16:   # §Perf hillclimb 3: halve the wire bytes
         buckets = pack_u16_pairs(
             buckets.reshape(n_shards * cap_bucket, k_cols)
@@ -147,7 +169,8 @@ def repartition_distinct_local(data: jax.Array, count: jax.Array, *,
     recv_counts = lax.all_to_all(bcounts.reshape(n_shards, 1), axis,
                                  split_axis=0, concat_axis=0).reshape(-1)
     overflow = lax.pmax(overflow, axis)
-    # 4. flatten + local δ = global δ
+    # 3. flatten + compact (validity tracked by counts, so u16 packing of
+    # PAD rows round-trips harmlessly — they are re-masked here)
     cap_bucket_total = n_shards * cap_bucket
     flat = recv.reshape(cap_bucket_total, -1)
     row_in_bucket = jnp.arange(cap_bucket_total, dtype=jnp.int32) % cap_bucket
@@ -155,6 +178,39 @@ def repartition_distinct_local(data: jax.Array, count: jax.Array, *,
     valid = row_in_bucket < recv_counts[bucket_of_row]
     flat, n = compact(jnp.where(valid[:, None], flat, jnp.int32(PAD_ID)),
                       valid)
+    return flat, n, overflow
+
+
+def repartition_distinct_local(data: jax.Array, count: jax.Array, *,
+                               axis: str, n_shards: int, cap_bucket: int,
+                               use_pallas: Optional[bool] = None,
+                               pack_u16: bool = False,
+                               dedup: Optional[str] = None
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard body: local δ -> hash partition -> all_to_all -> local δ.
+
+    The plan-level global-δ primitive: callable from *inside* any
+    ``shard_map`` body over ``axis`` — both :func:`make_repartition_distinct`
+    (the standalone collective closure) and the fused mesh plan compiler
+    (:func:`repro.plan.mesh.compile_mesh_plan`, where it runs as the plan's
+    sink instead of a host-side post-pass) consume it. Takes this shard's
+    ``data [cap_local, k]`` / scalar ``count`` and returns
+    ``(data [n_shards * cap_bucket, k], count [1], overflow [1])`` — the
+    globally-deduplicated rows that hash to this shard. The exchange itself
+    is :func:`repartition_by_key` over all columns.
+
+    Both local δ passes go through :func:`repro.relalg.ops.dedup_rows`, so
+    the single-device and distributed paths share one implementation and one
+    ``dedup`` strategy ("lex" | "hash" | None = engine default).
+    """
+    count = count.reshape(())
+    # 1. dedup BEFORE the collective (pushdown to the network)
+    data, count = dedup_rows(data, count, dedup, use_pallas=use_pallas)
+    # 2. hash-repartition so every duplicate group lands on one shard
+    flat, n, overflow = repartition_by_key(
+        data, count, axis=axis, n_shards=n_shards, cap_bucket=cap_bucket,
+        key_cols=None, use_pallas=use_pallas, pack_u16=pack_u16)
+    # 3. local δ = global δ
     flat, n = dedup_rows(flat, n, dedup, use_pallas=use_pallas)
     return flat, n.reshape(1), overflow.reshape(1)
 

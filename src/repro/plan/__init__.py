@@ -13,7 +13,8 @@ from .ir import (Distinct, EmitTriples, EquiJoin, Node, Pred, Project, Scan,
 from .lower import LogicalPlan, lower, selection_preds
 from .optimize import (PlanStats, cse, merge_maps, optimize,
                        push_projections, push_selections)
-from .annotate import annotate, annotate_local
+from .annotate import (JoinExchange, annotate, annotate_local,
+                       join_exchange_cost, poisson_shard_bound)
 from .compile import (compile_plan, execute_node, input_names,
                       materialize_plan)
 from .mesh import compile_mesh_plan, plan_scans
@@ -21,11 +22,13 @@ from .explain import dump_plan, explain
 
 __all__ = [
     "Distinct", "EmitTriples", "EquiJoin", "LogicalPlan", "Node",
-    "PlanStats", "Pred", "Project", "Scan", "Select", "Union", "annotate",
+    "JoinExchange", "PlanStats", "Pred", "Project", "Scan", "Select",
+    "Union", "annotate",
     "annotate_local", "compile_mesh_plan", "compile_plan", "cse",
     "dump_plan", "execute_node", "explain",
-    "fingerprint", "input_names", "intern", "iter_nodes", "lower",
-    "make_select",
+    "fingerprint", "input_names", "intern", "iter_nodes",
+    "join_exchange_cost", "lower",
+    "make_select", "poisson_shard_bound",
     "materialize_plan", "merge_maps", "optimize", "plan_scans",
     "push_projections", "push_selections", "selection_preds", "tree_size",
 ]

@@ -32,6 +32,7 @@ session sources after ingestion.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Callable, Dict, Mapping, Optional, Tuple
 
@@ -44,6 +45,105 @@ from .ir import (Distinct, EmitTriples, EquiJoin, Node, Project, Scan,
 from .lower import LogicalPlan
 
 Rows = Tuple[np.ndarray, Tuple[str, ...]]  # valid rows [n, k] + attr names
+
+#: per-collective launch overhead (seconds) the exchange cost model adds on
+#: top of wire time — the tie-breaker that keeps tiny relations on the
+#: single-collective gather plan instead of the two-exchange repartition
+#: (~dispatch latency of one ICI collective; crossover therefore sits near
+#: ``launch · ICI_BW ≈ 100 KiB`` of parent bytes per device)
+COLLECTIVE_LAUNCH_S = 2e-6
+
+JOIN_EXCHANGES = ("gather", "repartition", "auto")
+
+
+def poisson_shard_bound(total: int, n_shards: int) -> int:
+    """Expected per-shard share of ``total`` hash-partitioned rows plus a
+    Poisson tail: ``m + 6·sqrt(m) + 8`` with ``m = total / n_shards``,
+    clamped to ``total`` (one shard can never receive more than everything,
+    and on one shard the exchange is the identity). The same bound
+    :func:`repro.core.distributed.sink_bucket_cap` uses for the sink's
+    buckets, applied to post-exchange *node* buffers; skew beyond the tail
+    is caught by the runtime overflow flag and answered with a
+    safe-capacity recompile (see ``annotate_local``)."""
+    total = int(total)
+    if n_shards <= 1:
+        return total
+    m = total / n_shards
+    return min(total, int(math.ceil(m + 6.0 * math.sqrt(m) + 8)))
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinExchange:
+    """Per-⋈ exchange decision + the cost-model terms behind it.
+
+    ``*_bytes`` are the estimated per-device wire bytes of each strategy
+    (computed from the *static buffer capacities* that actually cross the
+    ICI — fixed shapes, padding included — not from row counts);
+    ``*_seconds`` add the per-collective launch overhead. Produced by
+    :func:`join_exchange_cost` / ``annotate_local``, consumed by
+    :func:`repro.plan.mesh.compile_mesh_plan` and rendered by
+    ``explain``/``dump_plan``.
+    """
+
+    strategy: str               # "gather" | "repartition"
+    gather_bytes: int
+    repartition_bytes: int
+    gather_seconds: float
+    repartition_seconds: float
+
+
+def join_exchange_cost(child_cap_local: int, child_cols: int,
+                       parent_cap_local: int, parent_cols: int,
+                       n_shards: int, strategy: str = "auto",
+                       word_bytes: int = 4) -> JoinExchange:
+    """Price the two ⋈ exchange strategies and pick one.
+
+    Inputs are the SHARD-LOCAL buffer capacities (rows) and widths
+    (columns) of the child and parent relations — the fixed shapes the
+    collectives move. Per device, over a ``n_shards``-way axis:
+
+    * ``gather``      — the parent block is ``all_gather``'ed: receive
+      ``(n-1) · parent_cap_local · parent_cols`` words (one collective;
+      the gathered parent is shared by every ⋈ on the same parent node).
+    * ``repartition`` — both sides are hash-partitioned on the join key
+      and exchanged: receive ``(n-1)`` buckets of
+      ``min(cap_local, sink_bucket_cap(cap_local, n))`` rows per side (two
+      collectives) — the same clamp ``compile_mesh_plan`` allocates with,
+      so the estimate prices the buffers that actually cross the wire.
+
+    Wire seconds use the v5e ICI bandwidth from
+    :mod:`repro.launch.mesh` plus :data:`COLLECTIVE_LAUNCH_S` per
+    collective. Repartition therefore wins exactly when the parent side is
+    large relative to the child (the all_gather wall), and loses on small
+    relations where the per-bucket Poisson padding and the extra collective
+    dominate. ``strategy`` forces the choice (``"gather"`` /
+    ``"repartition"``) or lets the model decide (``"auto"``); one shard
+    always gathers under ``"auto"`` (both strategies are the identity, the
+    gather plan is the cheaper program).
+    """
+    from repro.core.distributed import sink_bucket_cap
+    from repro.launch.mesh import ICI_BW
+    if strategy not in JOIN_EXCHANGES:
+        raise ValueError(f"unknown join exchange {strategy!r} "
+                         f"(expected one of {JOIN_EXCHANGES})")
+    n = max(1, int(n_shards))
+
+    def bucket(cap_local: int) -> int:
+        return min(int(cap_local), sink_bucket_cap(int(cap_local), n))
+
+    gather_bytes = (n - 1) * int(parent_cap_local) * parent_cols * word_bytes
+    rep_rows = (bucket(child_cap_local) * child_cols
+                + bucket(parent_cap_local) * parent_cols)
+    repartition_bytes = (n - 1) * rep_rows * word_bytes
+    gather_s = gather_bytes / ICI_BW + 1 * COLLECTIVE_LAUNCH_S
+    repartition_s = repartition_bytes / ICI_BW + 2 * COLLECTIVE_LAUNCH_S
+    if strategy == "auto":
+        strategy = ("repartition" if n > 1 and repartition_s < gather_s
+                    else "gather")
+    return JoinExchange(strategy=strategy, gather_bytes=gather_bytes,
+                        repartition_bytes=repartition_bytes,
+                        gather_seconds=gather_s,
+                        repartition_seconds=repartition_s)
 
 
 def _eval_rows(node: Node, sources: Mapping[str, Table],
@@ -178,31 +278,56 @@ def annotate_local(plan: LogicalPlan, n_shards: int,
                    slack: float = 1.0,
                    cap_fn: Callable[[int], int] = round_cap,
                    sources: Optional[Mapping[str, Table]] = None,
-                   ) -> Tuple[Dict[Node, int], Dict[Node, int]]:
-    """Shard-local (counts, capacities) for the fused mesh closure.
+                   join_exchange: str = "gather",
+                   safe_exchange: bool = False,
+                   ) -> Tuple[Dict[Node, int], Dict[Node, int],
+                              Dict[Node, JoinExchange]]:
+    """Shard-local (counts, capacities, exchanges) for the fused mesh
+    closure.
 
     The fused distributed plan (:mod:`repro.plan.mesh`) runs every node on
     *per-shard row blocks*: a Scan sees at most ``cap_locals[source]`` rows,
     and every downstream buffer only needs to hold that shard's slice. This
-    sizes those buffers:
+    sizes those buffers and picks the exchange strategy per ⋈:
 
     * ``counts`` are the GLOBAL counts of :func:`annotate` (exact or bound
       mode) — what the engine's Table-1-style stats report.
     * ``caps[node]`` are SHARD-LOCAL: ``min(global count, structural local
       bound)`` where the local bound walks the subtree with Scans clamped
-      to ``cap_locals`` (π/σ/δ bounded by their child, ∪ by the sum).
+      to ``cap_locals`` (π/σ bounded by their child, ∪ by the sum).
+    * ``exchanges[join]`` is the :class:`JoinExchange` decision of
+      :func:`join_exchange_cost` under the ``join_exchange`` knob
+      (``"gather"`` | ``"repartition"`` | ``"auto"``), priced from the
+      already-computed shard-local caps of the child and parent relations.
 
-    Both terms of the min are true per-shard bounds in ``"exact"`` mode: a
-    shard's slice of any relation node is a sub-multiset of the global
-    relation (Scans partition rows; shard-local δ keeps at most one copy of
-    each globally-distinct row). An ⋈'s output is bounded by the *global*
-    exact match total because the fused plan all_gathers + deduplicates the
-    parent side — each shard joins its (duplicate-free slice of the) child
-    rows against the full parent relation, so its matches are a subset of
-    the global matches. In ``"bound"`` mode the ⋈ keeps the FK heuristic
-    (shard-local left + global right) and the runtime overflow flag +
-    recompile-on-overflow covers the gap, exactly as on one device.
+    **Post-exchange bounds.** The mesh executes every interior δ as a
+    global hash-repartition (all copies of a row share its rowhash, so a
+    local δ after the exchange is globally exact — what makes the mesh
+    ``raw`` count match single-device semantics). A shard's post-exchange
+    δ block therefore holds the globally-distinct rows *hashing to it* —
+    bounded by :func:`poisson_shard_bound` of the global distinct count,
+    NOT by the subtree's pre-exchange slice (a shard can receive more rows
+    than its own slice held). The local-bound walk accordingly treats δ as
+    a redistribution point; π/σ/∪ above it inherit the post-exchange
+    bound. A repartitioned ⋈ is sized the same way from its global match
+    total: each shard joins one hash range of the key space, expected
+    ``total / n_shards`` matches plus the tail.
+
+    Every bound of the ``safe_exchange=False`` default is exact *in
+    expectation* but not adversarially: key/hash skew past the Poisson
+    tail trips the runtime overflow flag, and the engine rebuilds once
+    with ``safe_exchange=True`` — post-exchange caps grow to the full
+    global counts (a true bound: one shard can never hold more than
+    everything), so recompile-on-overflow terminates after exactly one
+    recompile, exactly as on one device. Gather-strategy ⋈ caps keep the
+    global total in ``"exact"`` mode (each shard's child slice is an exact
+    sub-multiset of the global child, so its matches against the fully
+    gathered parent are a subset of the global matches) and the FK
+    heuristic (shard-local left + global right) in ``"bound"`` mode.
     """
+    if join_exchange not in JOIN_EXCHANGES:
+        raise ValueError(f"unknown join exchange {join_exchange!r} "
+                         f"(expected one of {JOIN_EXCHANGES})")
     counts, _ = annotate(plan, mode=mode, slack=slack, cap_fn=cap_fn,
                          sources=sources)
     lmemo: Dict[Node, int] = {}
@@ -213,7 +338,12 @@ def annotate_local(plan: LogicalPlan, n_shards: int,
             return hit
         if isinstance(node, Scan):
             out = int(cap_locals[node.source])
-        elif isinstance(node, (Project, Select, Distinct)):
+        elif isinstance(node, Distinct):
+            # executed as a global hash-repartition: the shard holds the
+            # distinct rows hashing to it, not its pre-exchange slice
+            out = (counts[node] if safe_exchange
+                   else poisson_shard_bound(counts[node], n_shards))
+        elif isinstance(node, (Project, Select)):
             out = local_bound(node.children()[0])
         elif isinstance(node, Union):
             out = sum(local_bound(c) for c in node.inputs)
@@ -223,14 +353,29 @@ def annotate_local(plan: LogicalPlan, n_shards: int,
         return out
 
     caps: Dict[Node, int] = {}
+    joins = []
     for node, c in counts.items():
         if isinstance(node, EquiJoin):
-            local = c if mode == "exact" else \
-                min(c, local_bound(node.left) + counts[node.right])
+            joins.append(node)
+            continue
+        caps[node] = cap_fn(int(math.ceil(min(c, local_bound(node))
+                                          * slack)))
+    exchanges: Dict[Node, JoinExchange] = {}
+    for node in joins:
+        c = counts[node]
+        exch = join_exchange_cost(
+            caps[node.left], len(node.left.attrs),
+            caps[node.right], len(node.right.attrs),
+            n_shards, strategy=join_exchange)
+        exchanges[node] = exch
+        if exch.strategy == "repartition":
+            local = c if safe_exchange else poisson_shard_bound(c, n_shards)
+        elif mode == "exact":
+            local = c
         else:
-            local = min(c, local_bound(node))
+            local = min(c, local_bound(node.left) + counts[node.right])
         caps[node] = cap_fn(int(math.ceil(local * slack)))
-    return counts, caps
+    return counts, caps, exchanges
 
 
 def _relation_nodes(root: Node):

@@ -62,7 +62,7 @@ def execute_node(node: Node, sources: Mapping[str, Table],
                  dedup: Optional[str] = None,
                  caps: Optional[Mapping[Node, int]] = None,
                  overflow: Optional[List[jax.Array]] = None, *,
-                 join_gather=None) -> Table:
+                 join_exchange=None, distinct_global=None) -> Table:
     """Evaluate one DAG node (and, via ``memo``, each shared subtree once).
 
     When ``overflow`` is a list, every capped operator appends a scalar
@@ -70,26 +70,35 @@ def execute_node(node: Node, sources: Mapping[str, Table],
     was truncated" — exactly once per unique node. ``KGEngine`` reduces the
     flags to its recompile-on-overflow signal.
 
-    ``join_gather`` is the mesh hook: when given, every ⋈ *parent* relation
-    passes through ``join_gather(right_node, right_table)`` before the join.
-    The fused distributed plan uses it to all_gather the (shard-local)
-    parent rows so a row-sharded child joins against the full parent
-    relation (see :mod:`repro.plan.mesh`); single-device execution leaves
-    it ``None`` (identity).
+    ``join_exchange`` and ``distinct_global`` are the mesh hooks
+    (:mod:`repro.plan.mesh`); single-device execution leaves them ``None``:
+
+    * ``join_exchange(node, left, right) -> (left, right)`` runs before
+      every ⋈ — the fused distributed plan either all_gathers the
+      (shard-local) parent rows so a row-sharded child joins against the
+      full parent relation, or hash-repartitions *both* sides by join key
+      so each shard joins only its key range.
+    * ``distinct_global(node, child) -> table`` replaces the local δ of a
+      ``Distinct`` node — the mesh makes it a global hash-repartition δ,
+      so every interior relation stays an exact multiset partition of its
+      single-device value (what keeps the mesh ``raw`` count exact). The
+      returned table is still fitted to the node's plan-time capacity and
+      flagged on truncation here.
     """
     hit = memo.get(node)
     if hit is not None:
         return hit
     caps = caps or {}
+    kw = dict(join_exchange=join_exchange, distinct_global=distinct_global)
     if isinstance(node, Scan):
         out = sources[node.source]
     elif isinstance(node, Project):
         child = execute_node(node.child, sources, memo, emitter, dedup, caps,
-                             overflow, join_gather=join_gather)
+                             overflow, **kw)
         out = project_as(child, list(node.spec))
     elif isinstance(node, Select):
         child = execute_node(node.child, sources, memo, emitter, dedup, caps,
-                             overflow, join_gather=join_gather)
+                             overflow, **kw)
         sel = select_mask(child, _pred_mask(child, node.preds))
         cap = caps.get(node)
         if overflow is not None and cap is not None:
@@ -97,15 +106,16 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         out = _fit(sel, cap)
     elif isinstance(node, Distinct):
         child = execute_node(node.child, sources, memo, emitter, dedup, caps,
-                             overflow, join_gather=join_gather)
-        dd = distinct(child, dedup=dedup)
+                             overflow, **kw)
+        dd = (distinct(child, dedup=dedup) if distinct_global is None
+              else distinct_global(node, child))
         cap = caps.get(node)
         if overflow is not None and cap is not None:
             overflow.append(dd.count > jnp.int32(cap))
         out = _fit(dd, cap)
     elif isinstance(node, Union):
         parts = [execute_node(c, sources, memo, emitter, dedup, caps,
-                              overflow, join_gather=join_gather)
+                              overflow, **kw)
                  for c in node.inputs]
         aligned = [parts[0]] + [project(p, parts[0].attrs) for p in parts[1:]]
         data = jnp.concatenate([_masked_data(p) for p in aligned], axis=0)
@@ -114,11 +124,11 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         out = Table(data=data, count=count, attrs=parts[0].attrs)
     elif isinstance(node, EquiJoin):
         left = execute_node(node.left, sources, memo, emitter, dedup, caps,
-                            overflow, join_gather=join_gather)
+                            overflow, **kw)
         right = execute_node(node.right, sources, memo, emitter, dedup, caps,
-                             overflow, join_gather=join_gather)
-        if join_gather is not None:
-            right = join_gather(node.right, right)
+                             overflow, **kw)
+        if join_exchange is not None:
+            left, right = join_exchange(node, left, right)
         cap = caps.get(node, round_cap(left.capacity * 4))
         out, total = equi_join(left, right, node.left_key, node.right_key,
                                out_capacity=cap,
@@ -129,9 +139,9 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         if emitter is None:
             raise ValueError("EmitTriples node needs an emitter")
         table = execute_node(node.input, sources, memo, emitter, dedup, caps,
-                             overflow, join_gather=join_gather)
+                             overflow, **kw)
         joins = {i: execute_node(j, sources, memo, emitter, dedup, caps,
-                                 overflow, join_gather=join_gather)
+                                 overflow, **kw)
                  for i, j in node.joins}
         out = emitter.emit_triples(node.tm, table, joins)
     else:

@@ -4,13 +4,15 @@ Renders the full DAG (sink δ → ∪ → per-map emits → joins → relation
 chains) as an indented text tree with per-node capacity/row annotations
 from the annotation pass. Shared subtrees (CSE hits, join parents) print
 once and show up as ``(shared #k)`` references afterwards, making the
-common-subplan elimination visible.
+common-subplan elimination visible. On a mesh, every ⋈ additionally shows
+its cost-modeled exchange decision (gather vs repartition) and the
+estimated per-device wire bytes of both strategies.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Mapping, Optional
 
-from .annotate import annotate
+from .annotate import JoinExchange, annotate, annotate_local
 from .ir import (Distinct, EmitTriples, EquiJoin, Node, Project, Scan,
                  Select, Union)
 from .lower import LogicalPlan
@@ -38,12 +40,28 @@ def _label(node: Node) -> str:
     return type(node).__name__
 
 
+def _fmt_bytes(n: int) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}GiB"  # pragma: no cover - unreachable
+
+
 def dump_plan(plan: LogicalPlan, engine: str = "rmlmapper",
               counts: Optional[Mapping[Node, int]] = None,
-              caps: Optional[Mapping[Node, int]] = None) -> str:
-    """Text tree of the whole plan DAG with per-node annotations."""
+              caps: Optional[Mapping[Node, int]] = None,
+              exchanges: Optional[Mapping[Node, JoinExchange]] = None
+              ) -> str:
+    """Text tree of the whole plan DAG with per-node annotations.
+
+    ``exchanges`` (a mesh plan's per-⋈ decisions from ``annotate_local``)
+    adds ``exchange=<strategy>`` plus the estimated per-device wire bytes
+    of both strategies to every ⋈ line."""
     counts = counts or {}
     caps = caps or {}
+    exchanges = exchanges or {}
     root = plan.sink(engine)
     shared_ids: Dict[int, int] = {}
     seen_multi = _multi_referenced(root)
@@ -55,6 +73,11 @@ def dump_plan(plan: LogicalPlan, engine: str = "rmlmapper",
             bits.append(f"rows={counts[node]}")
         if node in caps:
             bits.append(f"cap={caps[node]}")
+        exch = exchanges.get(node)
+        if exch is not None:
+            bits.append(f"exchange={exch.strategy}")
+            bits.append(f"gather≈{_fmt_bytes(exch.gather_bytes)}")
+            bits.append(f"all_to_all≈{_fmt_bytes(exch.repartition_bytes)}")
         return ("  [" + ", ".join(bits) + "]") if bits else ""
 
     def render(node: Node, prefix: str, is_last: bool, is_root: bool):
@@ -95,9 +118,27 @@ def _multi_referenced(root: Node) -> Dict[int, int]:
 
 
 def explain(plan: LogicalPlan, engine: str = "rmlmapper",
-            with_annotations: bool = True) -> str:
-    """Convenience: annotate (host-side, exact) and dump the plan."""
-    if with_annotations:
+            with_annotations: bool = True, n_shards: Optional[int] = None,
+            join_exchange: str = "auto") -> str:
+    """Convenience: annotate (host-side, exact) and dump the plan.
+
+    With ``n_shards`` the annotation runs shard-locally
+    (:func:`annotate_local`, per-shard source blocks derived from the
+    plan's source capacities) and every ⋈ line shows the cost model's
+    exchange decision under ``join_exchange`` plus the estimated wire
+    bytes per strategy — what a mesh ``KGEngine`` session would compile.
+    """
+    if not with_annotations:
+        return dump_plan(plan, engine)
+    if n_shards is None:
         counts, caps = annotate(plan)
         return dump_plan(plan, engine, counts, caps)
-    return dump_plan(plan, engine)
+    from repro.relalg.table import bucket_cap
+    from .mesh import plan_scans
+    cap_locals = {name: bucket_cap(-(-plan.dis.sources[name].capacity
+                                     // n_shards))
+                  for name in plan_scans(plan)}
+    counts, caps, exchanges = annotate_local(
+        plan, n_shards=n_shards, cap_locals=cap_locals,
+        join_exchange=join_exchange)
+    return dump_plan(plan, engine, counts, caps, exchanges)

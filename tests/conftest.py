@@ -1,0 +1,27 @@
+"""Shared test configuration: hypothesis profiles.
+
+Two profiles for the property suites (``test_engine_properties.py``,
+``test_planner_properties.py``, ``test_join_exchange.py``):
+
+* ``dev`` (default) — few examples, deadline off: fast local runs.
+* ``ci``  — more examples, deadline off: selected by the CI matrix's
+  8-virtual-device leg via ``pytest --hypothesis-profile=ci``, so the
+  expensive collective paths get the deeper randomized sweep exactly where
+  they exercise real multi-device collectives.
+
+Per-test ``@settings(...)`` decorators override only the arguments they
+pin; everything else (notably ``max_examples`` for the differential
+harness) falls through to the active profile.
+"""
+
+try:  # hypothesis is a test extra; tier-1 collection must survive without it
+    from hypothesis import HealthCheck, settings
+
+    _suppress = [HealthCheck.too_slow, HealthCheck.data_too_large]
+    settings.register_profile("dev", max_examples=10, deadline=None,
+                              suppress_health_check=_suppress)
+    settings.register_profile("ci", max_examples=30, deadline=None,
+                              suppress_health_check=_suppress)
+    settings.load_profile("dev")   # --hypothesis-profile=ci overrides
+except ImportError:  # pragma: no cover - bare environment
+    pass

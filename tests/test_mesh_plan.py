@@ -51,10 +51,15 @@ def _reencode(src_dis, name, vocab, attrs):
 @pytest.mark.parametrize("dedup", ["hash", "lex"])
 def test_fused_mesh_bit_identical_across_engines_and_dedup(engine, dedup):
     mk = lambda: make_group_b_dis(96, 0.6, seed=21)  # noqa: E731
-    kg_single, _ = KGEngine(mk(), engine=engine, dedup=dedup).create_kg()
+    kg_single, stats_single = KGEngine(mk(), engine=engine,
+                                       dedup=dedup).create_kg()
     kg_mesh, stats = KGEngine(mk(), engine=engine, dedup=dedup,
                               mesh=_mesh()).create_kg()
     np.testing.assert_array_equal(kg_mesh.to_codes(), kg_single.to_codes())
+    # the mesh raw count matches single-device semantics exactly (global
+    # per-map δ under sdm, blind generation under rmlmapper) — interior δ
+    # is a global repartition δ, so per-shard counts sum to the global ones
+    assert stats["raw_triples"] == stats_single["raw_triples"]
     kg_eager = _oracle(mk(), mk().sources, engine, dedup)
     assert kg_mesh.row_set() == kg_eager.row_set()
     assert stats["recompiles"] == 0
@@ -169,6 +174,51 @@ def test_mesh_interior_overflow_recompiles_not_truncates():
     assert stats["kg_triples"] == 2 * (4 + 10)   # nothing truncated
     kg_ref = _oracle(dis, eng.sources)
     np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+
+
+def test_repartition_overflow_recompiles_not_truncates():
+    """Satellite of the ⋈ exchange work: a key-skewed ingest that blows
+    past one shard's post-exchange join capacity (the Poisson-sized cap of
+    ``annotate_local``) must trigger exactly ONE recompile — the
+    ``safe_exchange`` rebuild whose caps are true bounds even under
+    adversarial skew — and produce the bit-exact KG, never truncate.
+
+    Seed: 40 child keys one row each; parent has one hot key (K1) with 16
+    rows. The ingest adds 8 more K1 child rows *within* the child's source
+    bucket, exploding the join total from 55 to 183 — past the plan-time
+    cap on one device (exact total 55 → bucket 64) and past the hot
+    shard's Poisson share on many."""
+    child = [{"ID": i, "k": f"K{i}", "v": f"v{i}"} for i in range(40)]
+    parent = [{"ID": i, "k": f"K{i}", "p": f"p{i}"} for i in range(40)]
+    parent += [{"ID": 100 + i, "k": "K1", "p": f"hot{i}"} for i in range(15)]
+    spec = {"sources": {
+        "child": {"attrs": ["ID", "k", "v"], "records": child},
+        "parent": {"attrs": ["ID", "k", "p"], "records": parent}},
+        "maps": [
+            {"name": "M1", "source": "child",
+             "subject": {"template": "http://ex/C/{v}", "class": "ex:C"},
+             "poms": [{"predicate": "ex:rel",
+                       "object": {"parentTriplesMap": "M2",
+                                  "joinCondition": {"child": "k",
+                                                    "parent": "k"}}}]},
+            {"name": "M2", "source": "parent",
+             "subject": {"template": "http://ex/P/{p}", "class": "ex:P"},
+             "poms": []}]}
+    dis = parse_dis(spec)
+    eng = KGEngine(dis, mesh=_mesh(), join_exchange="repartition")
+    eng.create_kg()
+    assert eng.stats()["recompiles"] == 0    # the seed fits the Poisson caps
+    fresh = [{"ID": 200 + i, "k": "K1", "v": f"w{i}"} for i in range(8)]
+    kg, stats = eng.ingest({"child": Table.from_records(
+        fresh, ("ID", "k", "v"), eng.vocab)})
+    assert stats["recompiles"] == 1
+    assert eng._last["entry"].safe_exchange
+    kg_ref = _oracle(dis, eng.sources)
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+    # the safe entry keeps serving: a re-run must not recompile again
+    kg2, stats2 = eng.create_kg()
+    assert stats2["recompiles"] == 1
+    np.testing.assert_array_equal(kg2.to_codes(), kg.to_codes())
 
 
 @pytest.mark.parametrize("engine", ["sdm", "rmlmapper"])
