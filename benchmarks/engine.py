@@ -14,15 +14,19 @@ amortization literal:
                 within-bucket appends re-execute the cached closure with
                 zero re-trace (triples/sec + recompile counts reported).
 
-Three hard correctness gates run in every invocation (including
+Four hard correctness gates run in every invocation (including
 ``--smoke``): an out-of-capacity extension (16× the seed) must produce the
 bit-exact KG of a fresh run over the accumulated sources with exactly one
 recompile; the distributed shard_map δ path must reuse the session's
-cached collective closure (trace-count guard); and the fused mesh closure
+cached collective closure (trace-count guard); the fused mesh closure
 (``config="distributed_fused"``, over ALL available devices — 8 on the CI
 multi-device leg) must run with zero host gathers of intermediate triples
 (``forbid_transfers`` passes around the closure) while producing the
-bit-identical KG of the single-device planned path.
+bit-identical KG of the single-device planned path; and a fresh process
+against a populated persistent plan store
+(``config="warm_process_cold_start"``, see ``docs/plan_store.md``) must
+reach its first KG ≥ 10× faster than the cold process that populated it,
+bit-identically.
 
 Run: ``PYTHONPATH=src python -m benchmarks.engine [--smoke]``
 Artifacts: ``experiments/bench/engine.json``.
@@ -30,6 +34,7 @@ Artifacts: ``experiments/bench/engine.json``.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Dict, List
 
@@ -213,6 +218,67 @@ def check_fused_mesh_device_resident(n_rows: int, engine: str, dedup: str,
             "bitwise_equal_single_device": True}
 
 
+_WARM_START_CHILD = r"""
+import hashlib, json, sys, time
+from repro.api import KGEngine
+from repro.data.synthetic import make_group_b_dis
+
+root, n_rows = sys.argv[1], int(sys.argv[2])
+dis = make_group_b_dis(n_rows, 0.6, seed=0)
+t0 = time.perf_counter()          # post-import: plan + compile-or-load + run
+session = KGEngine(dis, plan_store=root)
+kg, stats = session.create_kg()
+kg.data.block_until_ready()
+dt = time.perf_counter() - t0
+print(json.dumps({
+    "seconds": dt,
+    "codes_sha": hashlib.sha256(kg.to_codes().tobytes()).hexdigest(),
+    "kg_triples": stats["kg_triples"],
+    "store_hits": stats["store_hits"],
+    "store_rejects": stats["store_rejects"]}))
+"""
+
+
+def check_warm_process_cold_start(n_rows: int) -> Dict[str, object]:
+    """Acceptance gate for the persistent plan store: a FRESH process
+    against a store populated by a previous process rehydrates the
+    AOT-serialized executable — no re-trace, no re-compile — and must be
+    ≥ 10× faster to first KG than the cold process that populated it,
+    with the bit-identical result (sha over ``to_codes()``)."""
+    import hashlib  # noqa: F401  (used by the child)
+    import os
+    import subprocess
+    import sys as _sys
+    import tempfile
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    with tempfile.TemporaryDirectory() as root:
+        runs = []
+        for _ in range(2):   # run 1 populates (cold), run 2 rehydrates
+            out = subprocess.run(
+                [_sys.executable, "-c", _WARM_START_CHILD, root,
+                 str(n_rows)], env=env, capture_output=True, text=True,
+                timeout=600)
+            assert out.returncode == 0, \
+                f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
+            runs.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    cold, warm = runs
+    assert cold["store_hits"] == 0, cold
+    assert warm["store_hits"] == 1 and warm["store_rejects"] == 0, warm
+    assert warm["codes_sha"] == cold["codes_sha"], \
+        "store-rehydrated KG differs from the cold compile"
+    cold_s, warm_s = cold["seconds"], warm["seconds"]
+    assert warm_s * 10 <= cold_s, \
+        f"warm process start only {cold_s / warm_s:.1f}x faster than cold"
+    return {"config": "warm_process_cold_start", "rows": 2 * n_rows,
+            "engine": "sdm", "dedup": None,
+            "kg_triples": cold["kg_triples"],
+            "cold_s": round(cold_s, 5), "warm_s": round(warm_s, 5),
+            "warm_speedup": round(cold_s / max(warm_s, 1e-9), 2),
+            "bitwise_equal": True}
+
+
 def _join_heavy_dis(n_child: int, n_parent: int, seed: int = 0):
     """A join-heavy config with a LARGE parent relative to the child —
     the regime where the all_gather ⋈ exchange hits the ICI wall and
@@ -335,6 +401,7 @@ def run(scale: float = 1.0, engine: str = "sdm", dedup: str = "hash",
         check_distributed_closure_reuse(max(16, n // 4), dedup),
         check_fused_mesh_device_resident(max(16, n // 4), engine, dedup,
                                          repeats),
+        check_warm_process_cold_start(max(16, n // 4)),
     ]
     rows.extend(check_join_exchange_crossover(n, engine, dedup, repeats))
     rows.append({"config": "plan_cache", **plan_cache_stats()})

@@ -16,6 +16,8 @@ too much same-machine noise to gate on):
   (the fused device-resident mesh path)
 * ``engine.json`` ``config=join_exchange_repartition`` → ``triples_per_s``
   (the repartition-by-join-key ⋈ exchange on the large-parent config)
+* ``engine.json`` ``config=warm_process_cold_start`` → ``warm_speedup``
+  (fresh-process start from the persistent plan store vs cold compile)
 
 A metric fails when ``current < reference / threshold`` (default 2.0 —
 "regresses more than 2x") against the **previous main artifact** — the
@@ -46,6 +48,10 @@ METRICS: List[Tuple[str, str, str]] = [
     # the repartition ⋈ exchange on the large-parent config (the path that
     # scales past the all_gather wall — see docs/engine.md §4)
     ("engine", "join_exchange_repartition", "triples_per_s"),
+    # fresh-process start against a populated persistent plan store vs the
+    # cold compile that populated it (docs/plan_store.md — gated ≥10× in
+    # the bench itself; the 2x threshold here catches store-path rot)
+    ("engine", "warm_process_cold_start", "warm_speedup"),
 ]
 
 

@@ -8,6 +8,9 @@ wrappers over this package. See ``docs/engine.md``.
 from .cache import (PLAN_CACHE, CachedPlan, PlanCache, clear_plan_cache,
                     plan_cache_stats)
 from .engine import KGEngine
+from .store import (PlanStore, default_store_root, resolve_store,
+                    store_envelope, store_key)
 
-__all__ = ["CachedPlan", "KGEngine", "PLAN_CACHE", "PlanCache",
-           "clear_plan_cache", "plan_cache_stats"]
+__all__ = ["CachedPlan", "KGEngine", "PLAN_CACHE", "PlanCache", "PlanStore",
+           "clear_plan_cache", "default_store_root", "plan_cache_stats",
+           "resolve_store", "store_envelope", "store_key"]

@@ -64,6 +64,11 @@ class CachedPlan:
     sink_slack: float = 1.0                       # mesh: sink δ bucket slack
     exchanges: Optional[Dict[Node, object]] = None  # mesh: per-⋈ decisions
     safe_exchange: bool = False                   # mesh: hard-safe buckets
+    #: where the closure came from: ``"build"`` (compiled in this process)
+    #: or ``"store"`` (rehydrated from the persistent plan store — the
+    #: engine treats a call-time failure of such a closure as one more
+    #: store-reject and rebuilds fresh instead of crashing)
+    origin: str = "build"
 
 
 class PlanCache:

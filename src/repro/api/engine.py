@@ -51,13 +51,17 @@ from repro.core.rdfizer import RDFizer
 from repro.core.schema import DIS, TRIPLE_ATTRS
 from repro.core.transform import TransformStats, plan_mapsdi
 from repro.plan.annotate import annotate, annotate_local
-from repro.plan.compile import compile_plan, input_names
+from repro.plan.compile import abstract_sources, compile_plan, input_names
 from repro.plan.ir import fingerprint
 from repro.plan.lower import LogicalPlan, lower
 from repro.relalg import (PAD_ID, Table, append_rows, bucket_cap, distinct,
                           host_int)
 
 from .cache import PLAN_CACHE, CachedPlan
+from .store import (NATIVE, STABLEHLO, deserialize_native,
+                    deserialize_stablehlo, pack_entry_meta, resolve_store,
+                    serialize_native, serialize_stablehlo, store_envelope,
+                    store_key, unpack_entry_meta)
 
 
 def _to_bucket(table: Table) -> Table:
@@ -135,13 +139,27 @@ class KGEngine:
         ``"auto"`` decisions are resolved at compile time from the
         plan-time counts, so they re-resolve on every capacity-bucket
         crossing.
+    plan_store
+        Persistent second tier behind the in-process LRU
+        (``docs/plan_store.md``): ``None`` (default) disables it; ``True``
+        or ``"default"`` uses ``$REPRO_PLAN_STORE`` /
+        ``~/.cache/repro-plans``; a path or a
+        :class:`repro.api.store.PlanStore` uses that store. With a store,
+        compiles go through AOT lowering, the executable is serialized to
+        disk keyed by the plan-cache key × a runtime compatibility
+        envelope, and an LRU-missing session in a *fresh process*
+        rehydrates it without re-tracing or re-compiling. Every load
+        failure (corruption, envelope mismatch, deserialization error)
+        silently degrades to a fresh compile — counted in ``stats()`` as
+        ``store_rejects``, never a crash, never a wrong KG. Requires
+        ``jit=True`` (eager sessions skip the store).
     """
 
     def __init__(self, dis: DIS, engine: str = "sdm",
                  dedup: Optional[str] = None, *, optimize: bool = True,
                  mode: str = "exact", slack: float = 1.0, mesh=None,
                  mesh_axis: str = "data", jit: bool = True,
-                 join_exchange: str = "auto"):
+                 join_exchange: str = "auto", plan_store=None):
         from repro.plan.annotate import JOIN_EXCHANGES
         if engine not in ("rmlmapper", "sdm"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -153,6 +171,10 @@ class KGEngine:
         self.join_exchange = join_exchange
         self.engine = engine
         self.dedup = dedup
+        self._store = resolve_store(plan_store)
+        self._store_hits = 0
+        self._store_misses = 0
+        self._store_rejects = 0
         self.optimize = optimize
         self.mode = mode
         self.slack = float(slack)
@@ -309,6 +331,11 @@ class KGEngine:
         safe_exchange = safe_exchange or self._safe_exchange
         self._safe_exchange = safe_exchange
         plan = self._slim_plan()
+        # with a persistent store, compiles go through explicit AOT
+        # lowering so the SAME executable both serves this session
+        # (entry.fn) and serializes to disk — never a second XLA compile
+        # just to write the entry back
+        aot = self._store is not None and self.jit
         if self.mesh is None:
             counts, caps = annotate(self._plan, mode=mode or self.mode,
                                     slack=self.slack, cap_fn=bucket_cap,
@@ -319,6 +346,7 @@ class KGEngine:
             fn = compile_plan(plan, self._emitter, engine=self.engine,
                               dedup=self.dedup, caps=caps, jit=self.jit,
                               report_overflow=True)
+            abstract = (abstract_sources(sources),) if aot else None
             entry = CachedPlan(key=key, plan=plan, emitter=self._emitter,
                                counts=counts, caps=caps, fn=fn,
                                engine=self.engine, dedup=self.dedup,
@@ -343,6 +371,10 @@ class KGEngine:
                 cap_locals=cap_locals, sink_slack=sink_slack,
                 pack_u16=len(self._dis.vocab) < (1 << 16), jit=self.jit,
                 exchanges=exchanges, safe_exchange=safe_exchange)
+            if aot:
+                from repro.plan.mesh import mesh_abstract_inputs
+                abstract = mesh_abstract_inputs(self._plan, cap_locals, n,
+                                                self.mesh, self.mesh_axis)
             entry = CachedPlan(key=key, plan=plan, emitter=self._emitter,
                                counts=counts, caps=caps, fn=fn,
                                engine=self.engine, dedup=self.dedup,
@@ -353,9 +385,99 @@ class KGEngine:
                                sink_slack=sink_slack,
                                exchanges=exchanges,
                                safe_exchange=safe_exchange)
+        if aot:
+            try:
+                entry.fn = fn.lower(*abstract).compile()
+            except Exception:   # AOT unavailable: keep the jitted closure
+                self._store.write_errors += 1
+                aot = False
+            entry.build_seconds = time.perf_counter() - t0
         PLAN_CACHE.put(key, entry)
+        if aot:
+            self._store_save(entry, fn, abstract)
         if self._have_plan:
             self._recompiles += 1
+        return entry
+
+    def _store_save(self, entry: CachedPlan, fn_jit, abstract) -> None:
+        """Write the AOT-compiled entry back to the persistent store —
+        best-effort: any serialization/IO failure is counted, never
+        raised (a full disk must not take the session down)."""
+        store = self._store
+        try:
+            env = store_envelope()
+            skey = store_key(entry.key, env)
+            payloads = {NATIVE: serialize_native(entry.fn)}
+            if store.portable:
+                payloads[STABLEHLO] = serialize_stablehlo(fn_jit, abstract)
+            store.save(skey, env, pack_entry_meta(entry, entry.plan),
+                       payloads)
+        except Exception:
+            store.write_errors += 1
+
+    def _store_load(self, key: Tuple,
+                    sources: Mapping[str, Table]) -> Optional[CachedPlan]:
+        """Second-tier lookup: validate, deserialize, and rehydrate a
+        :class:`CachedPlan` without re-tracing. Returns ``None`` (and
+        counts a miss or reject) whenever anything is off — the caller
+        then compiles fresh, so a bad store can delay but never corrupt
+        a session."""
+        store = self._store
+        if store is None or not self.jit:
+            return None
+        try:
+            env = store_envelope()
+            skey = store_key(key, env)
+        except TypeError:       # a non-canonical key component: no store
+            self._store_rejects += 1
+            return None
+        res = store.load(skey, env)
+        if res.status == "miss":
+            self._store_misses += 1
+            return None
+        if res.status == "reject":
+            self._store_rejects += 1
+            return None
+        t0 = time.perf_counter()
+        try:
+            meta = res.header["meta"]
+            if (meta.get("engine") != self.engine
+                    or meta.get("dedup") != self.dedup):
+                raise ValueError("entry engine/dedup mismatch")
+            unpacked = unpack_entry_meta(meta, self._plan)
+            if ("cap_locals" in unpacked) != (self.mesh is not None):
+                raise ValueError("mesh/single-device entry mismatch")
+            fn = None
+            if NATIVE in res.payloads:
+                try:          # fast tier: zero-recompile executable
+                    fn = deserialize_native(res.payloads[NATIVE])
+                except Exception:
+                    fn = None
+            if fn is None and STABLEHLO in res.payloads:
+                fn = deserialize_stablehlo(res.payloads[STABLEHLO])
+            if fn is None:
+                raise ValueError("no loadable payload")
+        except Exception as e:  # rehydration failure degrades to compile
+            self._store_rejects += 1
+            store._reject(f"rehydrate: {type(e).__name__}: {e}")
+            return None
+        self._store_hits += 1
+        if unpacked.get("safe_exchange"):
+            self._safe_exchange = True   # keep the sticky escalation
+        entry = CachedPlan(key=key, plan=self._slim_plan(),
+                           emitter=self._emitter,
+                           counts=unpacked["counts"], caps=unpacked["caps"],
+                           fn=fn, engine=self.engine, dedup=self.dedup,
+                           mode=unpacked["mode"],
+                           build_seconds=time.perf_counter() - t0,
+                           cap_locals=unpacked.get("cap_locals"),
+                           out_cap_local=unpacked.get("out_cap_local"),
+                           sink_slack=unpacked.get("sink_slack", 1.0),
+                           exchanges=unpacked.get("exchanges"),
+                           safe_exchange=unpacked.get("safe_exchange",
+                                                      False),
+                           origin="store")
+        PLAN_CACHE.put(key, entry)
         return entry
 
     def _ensure(self, sources: Mapping[str, Table]) -> Tuple[CachedPlan, bool]:
@@ -366,7 +488,9 @@ class KGEngine:
             self._cache_hits += 1
         else:
             self._cache_misses += 1
-            entry = self._build(key, sources)
+            entry = self._store_load(key, sources)
+            if entry is None:
+                entry = self._build(key, sources)
         self._have_plan = True
         return entry, hit
 
@@ -385,7 +509,18 @@ class KGEngine:
         if self.mesh is not None:
             kg, raw, entry, hit = self._run_mesh(entry, sources, hit)
         else:
-            kg, raw, over = entry.fn(sources)
+            try:
+                kg, raw, over = entry.fn(sources)
+            except Exception:
+                # a store-loaded executable that slipped past envelope
+                # validation but cannot actually execute here is one more
+                # store reject: rebuild fresh, never crash the session
+                if entry.origin != "store":
+                    raise
+                self._store_rejects += 1
+                hit = False
+                entry = self._build(entry.key, sources)
+                kg, raw, over = entry.fn(sources)
             if host_int(over):
                 # some buffer was truncated: re-annotate exactly against the
                 # *current* extension, grow caps monotonically, re-run — the
@@ -495,7 +630,16 @@ class KGEngine:
         single-device plan)."""
         from repro.core.distributed import unshard_rows
         datas, counts = self._shard_sources(sources, entry.cap_locals)
-        kg_d, kg_c, raw, over, sink_over = entry.fn(datas, counts)
+        try:
+            kg_d, kg_c, raw, over, sink_over = entry.fn(datas, counts)
+        except Exception:
+            # store-loaded mesh executable failed at call time (see run())
+            if entry.origin != "store":
+                raise
+            self._store_rejects += 1
+            hit = False
+            entry = self._build(entry.key, sources)
+            kg_d, kg_c, raw, over, sink_over = entry.fn(datas, counts)
         for _ in range(2):   # ≤1 capacity recompile + ≤1 sink-slack growth
             grow_caps, grow_sink = host_int(over), host_int(sink_over)
             if not (grow_caps or grow_sink):
@@ -536,7 +680,8 @@ class KGEngine:
         names = input_names(entry.plan)
         counts = entry.counts   # plan-time: exact for the extension the
         # entry was annotated against, an upper bound in "bound" mode
-        if exact_rows and self._last["cache_hit"] and entry.mode == "exact":
+        if exact_rows and entry.mode == "exact" \
+                and (self._last["cache_hit"] or entry.origin == "store"):
             # a hit reuses counts from whichever same-bucket extension
             # built the entry; recount for honest Table-1 reduced sizes
             counts, _ = annotate(entry.plan, mode="exact",
@@ -565,6 +710,9 @@ class KGEngine:
             "plan_cache_hit": self._last["cache_hit"],
             "plan_cache_hits": self._cache_hits,
             "plan_cache_misses": self._cache_misses,
+            "store_hits": self._store_hits,
+            "store_misses": self._store_misses,
+            "store_rejects": self._store_rejects,
         }
 
     def stats(self) -> Dict[str, object]:
@@ -579,6 +727,11 @@ class KGEngine:
             "plan_cache_hits": self._cache_hits,
             "plan_cache_misses": self._cache_misses,
             "plan_cache": PLAN_CACHE.stats(),
+            "store_hits": self._store_hits,
+            "store_misses": self._store_misses,
+            "store_rejects": self._store_rejects,
+            "plan_store": (None if self._store is None
+                           else self._store.stats()),
             "plan_seconds": self._plan_seconds,
             "source_buckets": {k: v.capacity
                                for k, v in self.sources.items()},

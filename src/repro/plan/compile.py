@@ -150,6 +150,23 @@ def execute_node(node: Node, sources: Mapping[str, Table],
     return out
 
 
+def abstract_sources(sources: Mapping[str, Table]) -> Dict[str, Table]:
+    """The :class:`jax.ShapeDtypeStruct` skeleton of a source mapping —
+    same pytree (Tables with their static attrs), no device buffers.
+
+    What AOT lowering (``compile_plan(...).lower(abstract).compile()``)
+    and ``jax.export`` trace against: the compiled program depends only on
+    shapes/dtypes, and the plan-cache/store key pins those exactly (source
+    buffer capacities are part of the key), so an executable lowered from
+    this skeleton serves every same-key extension."""
+    return {name: Table(data=jax.ShapeDtypeStruct(t.data.shape,
+                                                  t.data.dtype),
+                        count=jax.ShapeDtypeStruct(t.count.shape,
+                                                   t.count.dtype),
+                        attrs=t.attrs)
+            for name, t in sources.items()}
+
+
 def compile_plan(plan: LogicalPlan, emitter, engine: str = "rmlmapper",
                  dedup: Optional[str] = None,
                  caps: Optional[Mapping[Node, int]] = None, jit: bool = True,

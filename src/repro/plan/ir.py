@@ -275,6 +275,33 @@ def fingerprint(roots: Sequence[Node]) -> str:
     return hashlib.sha1("\n".join(lines).encode()).hexdigest()
 
 
+def node_order(roots: Sequence[Node]) -> list:
+    """Deterministic enumeration of a plan DAG's unique nodes.
+
+    The visit order is exactly :func:`fingerprint`'s (post-order over
+    ``children()``, shared subtrees once), so two processes whose plans
+    fingerprint equal assign every node the same index — which is what
+    lets the persistent plan store (:mod:`repro.api.store`) serialize
+    node-keyed metadata (capacities, counts, ⋈ exchange decisions) as
+    plain index lists and rehydrate them against a freshly lowered plan
+    in another process.
+    """
+    seen: Dict[Node, bool] = {}
+    out: list = []
+
+    def visit(n: Node) -> None:
+        if n in seen:
+            return
+        seen[n] = True
+        for c in n.children():
+            visit(c)
+        out.append(n)
+
+    for r in roots:
+        visit(r)
+    return out
+
+
 def make_select(child: Node, preds: Tuple[Pred, ...]) -> Node:
     """σ constructor that canonicalizes (sort, dedup) and flattens a direct
     Select child; returns ``child`` unchanged for an empty predicate set."""

@@ -97,6 +97,36 @@ def gather_table(table: Table, axis: str, n_shards: int) -> Table:
     return Table(data=data, count=count, attrs=table.attrs)
 
 
+def mesh_abstract_inputs(plan: LogicalPlan,
+                         cap_locals: Mapping[str, int], n_shards: int,
+                         mesh=None, axis: Optional[str] = None):
+    """The abstract ``(datas, counts)`` input pytrees of a mesh closure —
+    :class:`jax.ShapeDtypeStruct` leaves shaped exactly as
+    :func:`repro.core.distributed.shard_table` lays the sources out.
+
+    With ``mesh``/``axis`` given, every leaf additionally carries the
+    ``NamedSharding`` the real shard blocks arrive with, so AOT lowering
+    (``run.lower(*abstract).compile()``) bakes the same input layout the
+    jitted path would infer — the persistent plan store serializes that
+    executable with its shard layout (mesh shape/axis/device ids are part
+    of the store key, so a different mesh can never rehydrate it)."""
+    scans = plan_scans(plan)
+    shard_d = shard_c = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        shard_d = NamedSharding(mesh, P(axis, None))
+        shard_c = NamedSharding(mesh, P(axis))
+    datas = {name: jax.ShapeDtypeStruct(
+                (n_shards * int(cap_locals[name]),
+                 len(scans[name].scan_attrs)),
+                jnp.int32, sharding=shard_d)
+             for name in scans}
+    counts = {name: jax.ShapeDtypeStruct((n_shards,), jnp.int32,
+                                         sharding=shard_c)
+              for name in scans}
+    return datas, counts
+
+
 def compile_mesh_plan(plan: LogicalPlan, emitter, mesh, axis: str,
                       engine: str = "rmlmapper", dedup: Optional[str] = None,
                       caps: Optional[Mapping[Node, int]] = None,
@@ -257,13 +287,7 @@ def compile_mesh_plan(plan: LogicalPlan, emitter, mesh, axis: str,
     if jit:
         run = jax.jit(run)
 
-    abstract = (
-        {name: jax.ShapeDtypeStruct(
-            (n_shards * cap_locals[name], len(scans[name].scan_attrs)),
-            jnp.int32) for name in scans},
-        {name: jax.ShapeDtypeStruct((n_shards,), jnp.int32)
-         for name in scans},
-    )
+    abstract = mesh_abstract_inputs(plan, cap_locals, n_shards)
     out_shape = jax.eval_shape(run, *abstract)[0]
     out_cap_local = out_shape.shape[0] // n_shards
     return run, out_cap_local

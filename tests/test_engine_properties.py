@@ -14,7 +14,8 @@ pytest.importorskip("hypothesis", reason="test extra: pip install -r "
                     "requirements.txt")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
-from repro.api import KGEngine
+from repro.api import KGEngine, store_key
+from repro.api.store import canonical
 from repro.core.rdfizer import RDFizer
 from repro.data.synthetic import make_group_b_dis
 from repro.relalg import Table
@@ -78,3 +79,72 @@ def test_repeated_small_ingests_accumulate_correctly(seed, n_batches):
                                dis.sources["gene"].attrs)})
     kg_ref = _oracle(dis, eng.sources)
     np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+
+
+# ---------------------------------------------------------------------------
+# persistent plan store: key determinism (no id()/dict-order leakage)
+# ---------------------------------------------------------------------------
+
+_ENV = {"format": 1, "jax": "x", "jaxlib": "y", "backend": "cpu",
+        "device_kind": "cpu", "device_count": 1}
+
+_session_params = st.tuples(
+    st.sampled_from([8, 24, 48, 96]),            # n_rows → capacity buckets
+    st.integers(0, 3),                           # data seed
+    st.sampled_from(["rmlmapper", "sdm"]),
+    st.sampled_from([None, "lex", "hash"]),
+    st.sampled_from(["exact", "bound"]),
+    st.sampled_from([1.0, 2.0]))                 # bound-mode slack
+
+
+def _session_key(params):
+    n_rows, seed, engine, dedup, mode, slack = params
+    eng = KGEngine(make_group_b_dis(n_rows, 0.6, seed=seed), engine=engine,
+                   dedup=dedup, mode=mode, slack=slack, jit=False)
+    return eng._key(eng.sources)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(a=_session_params, b=_session_params)
+def test_store_keys_collide_iff_session_keys_collide(a, b):
+    """The on-disk key is a sha256 of the canonicalized in-process key:
+    two sessions share a store entry exactly when they would share an
+    in-process LRU entry. Both directions matter — a missed collision
+    wastes compiles; a spurious one would serve the WRONG executable."""
+    k1, k2 = _session_key(a), _session_key(b)
+    assert (store_key(k1, _ENV) == store_key(k2, _ENV)) == (k1 == k2)
+    # rebuilding the same session in THIS process reproduces the key
+    # exactly (no id()/insertion-order component can be hiding in it)
+    assert store_key(_session_key(a), _ENV) == store_key(k1, _ENV)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(params=_session_params,
+       field=st.sampled_from(sorted(_ENV)),
+       value=st.sampled_from(["other", 7]))
+def test_envelope_changes_always_change_the_store_key(params, field, value):
+    """Any envelope drift — version bump, backend/device change — maps
+    the same session to a DIFFERENT store entry (stale executables are
+    unreachable rather than rejected-on-load in the common case)."""
+    k = _session_key(params)
+    env2 = dict(_ENV)
+    env2[field] = value
+    assert (store_key(k, env2) == store_key(k, _ENV)) == (env2 == _ENV)
+
+
+def test_canonical_rejects_process_unstable_key_components():
+    """``canonical`` admits only value types whose repr is process-stable;
+    anything that could smuggle an ``id()`` or iteration order into the
+    key must raise, not silently produce an irreproducible key."""
+    for bad in ({"a": 1}, [1, 2], {1, 2}, object(), b"bytes",
+                (1, (2, [3]))):
+        with pytest.raises(TypeError):
+            canonical(bad)
+    # the admitted types round-trip deterministically
+    key = (None, True, 3, 2.5, "s", ("nested", 0))
+    assert canonical(key) == canonical((None, True, 3, 2.5, "s",
+                                        ("nested", 0)))

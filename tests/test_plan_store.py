@@ -1,0 +1,416 @@
+"""Persistent plan-store tests: cross-process differential + adversarial.
+
+Two suites gate the store (``repro.api.store``):
+
+* **Cross-process round trips** — a WRITER subprocess compiles every
+  engine × dedup combination (plus the fused mesh plan) into a store; a
+  fresh READER subprocess rehydrates each from disk and must report
+  ``store_hits`` with ``to_codes()`` and raw counts **bit-identical** to
+  the writer's cold compiles and to the eager RDFizer oracle — on 1 and
+  8 virtual devices (the multi-device legs follow the
+  ``test_distributed.py`` subprocess idiom).
+* **Adversarial degradation** — truncated files, bit flips, envelope /
+  key tampering, concurrent writers, an unwritable store root: every one
+  must degrade to a fresh compile with a bumped reject/error counter in
+  ``stats()``; never a crash, never a wrong KG.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (KGEngine, PlanStore, clear_plan_cache, resolve_store,
+                       store_envelope, store_key)
+from repro.api.store import (FORMAT_VERSION, MAGIC, NATIVE, STABLEHLO,
+                             read_container, write_container)
+from repro.core import parse_dis
+from repro.core.rdfizer import RDFizer
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: the writer/reader configuration matrix (mesh == fused plan over every
+#: visible device; single-device legs run it on a 1-device mesh)
+CONFIGS = [("sdm", "hash", False), ("sdm", None, False),
+           ("rmlmapper", "hash", False), ("rmlmapper", None, False),
+           ("sdm", "hash", True)]
+
+# one process plays WRITER (cold compiles, writes back) or READER (fresh
+# process, must rehydrate every entry from disk without compiling)
+_CHILD = r"""
+import json, sys
+from repro.api import KGEngine
+from repro.core.rdfizer import RDFizer
+from repro.data.synthetic import make_group_b_dis
+from repro.launch.mesh import make_mesh
+
+root, role = sys.argv[1], sys.argv[2]
+configs = json.loads(sys.argv[3])
+out = {}
+for engine, dedup, mesh in configs:
+    kwargs = dict(engine=engine, dedup=dedup, plan_store=root)
+    if mesh:
+        import jax
+        kwargs["mesh"] = make_mesh((jax.device_count(),), ("data",))
+    session = KGEngine(make_group_b_dis(48, 0.6, seed=3), **kwargs)
+    kg, stats = session.create_kg()
+    acc = session._dis.copy()
+    acc.sources = dict(session.sources)
+    kg_ref, _ = RDFizer(acc, engine, dedup=dedup)()
+    assert (kg.to_codes().tolist() == kg_ref.to_codes().tolist()), \
+        f"{role} {engine}/{dedup}/mesh={mesh}: KG differs from eager oracle"
+    out[f"{engine}/{dedup}/{mesh}"] = {
+        "codes": kg.to_codes().tolist(),
+        "raw": stats["raw_triples"],
+        "store_hits": stats["store_hits"],
+        "store_misses": stats["store_misses"],
+        "store_rejects": stats["store_rejects"]}
+print(json.dumps(out))
+"""
+
+
+def _run_child(args, n_devices=1, extra_env=None, code=_CHILD):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    if extra_env:
+        env.update(extra_env)
+    out = subprocess.run([sys.executable, "-c", code] + list(args), env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, \
+        f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# cross-process round trips: compile there, rehydrate here, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_devices", [1, 8])
+def test_cross_process_round_trip_bit_identical(tmp_path, n_devices):
+    """Every engine × dedup combination (plus the fused mesh plan)
+    compiled by one process is served from disk to a FRESH process —
+    ``store_hits`` for each, zero compiles re-traced, and the rehydrated
+    executables produce byte-for-byte the writer's KG codes and raw
+    counts (both already oracle-checked in-child)."""
+    root = str(tmp_path / "store")
+    cfg = json.dumps(CONFIGS)
+    writer = json.loads(_run_child([root, "writer", cfg], n_devices))
+    reader = json.loads(_run_child([root, "reader", cfg], n_devices))
+    assert set(writer) == set(reader) == {
+        f"{e}/{d}/{m}" for e, d, m in CONFIGS}
+    for name, w in writer.items():
+        r = reader[name]
+        assert w["store_hits"] == 0, (name, w)       # cold: nothing to hit
+        assert w["store_misses"] >= 1, (name, w)
+        assert r["store_hits"] == 1, (name, r)       # warm: served from disk
+        assert r["store_rejects"] == 0, (name, r)
+        assert r["codes"] == w["codes"], f"{name}: KG codes differ"
+        assert r["raw"] == w["raw"], f"{name}: raw counts differ"
+
+
+def test_cross_process_store_keys_stable_under_hash_randomization(tmp_path):
+    """The store key must be a pure function of DIS structure + runtime —
+    two processes with different ``PYTHONHASHSEED`` (str hashes, set/dict
+    iteration) derive the identical key, or workers could never share a
+    store."""
+    code = r"""
+import json, sys
+from repro.api import KGEngine
+from repro.api.store import store_key
+from repro.data.synthetic import make_group_b_dis
+session = KGEngine(make_group_b_dis(32, 0.6, seed=5), dedup="hash")
+env = {"format": 1, "jax": "x", "jaxlib": "y", "backend": "cpu",
+       "device_kind": "cpu", "device_count": 1}
+print(store_key(session._key(session.sources), env))
+"""
+    keys = {_run_child([], extra_env={"PYTHONHASHSEED": seed},
+                       code=code).strip()
+            for seed in ("0", "4242")}
+    assert len(keys) == 1, f"hash-seed-dependent store keys: {keys}"
+
+
+# ---------------------------------------------------------------------------
+# adversarial: corruption / mismatch / contention must degrade, not break
+# ---------------------------------------------------------------------------
+
+def _tiny_dis():
+    """One source, one map, no join — the cheapest real compile."""
+    return parse_dis({
+        "sources": {"s": {"attrs": ["a", "b"], "records": [
+            {"a": f"e{i}", "b": f"x{i}"} for i in range(6)]}},
+        "maps": [{"name": "m", "source": "s",
+                  "subject": {"template": "http://ex/S/{a}",
+                              "class": "ex:C"},
+                  "poms": [{"predicate": "ex:p",
+                            "object": {"reference": "b"}}]}]})
+
+
+def _populate_tiny(root):
+    """Compile the tiny DIS into ``root``; returns (entry path, KG codes)."""
+    clear_plan_cache()
+    store = PlanStore(str(root))
+    session = KGEngine(_tiny_dis(), plan_store=store)
+    kg, _stats = session.create_kg()
+    files = store._entry_files()
+    assert len(files) == 1 and store.writes == 1
+    return files[0], kg.to_codes()
+
+
+def _load_fresh(root):
+    """A fresh session over an LRU-cleared cache: forced store lookup."""
+    clear_plan_cache()
+    store = PlanStore(str(root))
+    session = KGEngine(_tiny_dis(), plan_store=store)
+    kg, stats = session.create_kg()
+    return kg, stats, store
+
+
+def test_clean_store_round_trip_in_process(tmp_path):
+    path, codes = _populate_tiny(tmp_path)
+    kg, stats, store = _load_fresh(tmp_path)
+    assert stats["store_hits"] == 1 and stats["store_rejects"] == 0
+    assert store.hits == 1
+    np.testing.assert_array_equal(kg.to_codes(), codes)
+
+
+@pytest.mark.parametrize("damage", ["truncate_header", "truncate_payload",
+                                    "bitflip_payload", "bitflip_magic",
+                                    "empty"])
+def test_corrupt_entry_degrades_to_fresh_compile(tmp_path, damage):
+    """Torn/flipped/emptied entry files are rejected by checksum — the
+    session compiles fresh, counts the reject, and the KG is exact."""
+    path, codes = _populate_tiny(tmp_path)
+    blob = open(path, "rb").read()
+    if damage == "truncate_header":
+        blob = blob[:20]
+    elif damage == "truncate_payload":
+        blob = blob[:int(len(blob) * 0.7)]
+    elif damage == "bitflip_payload":
+        i = len(blob) - 8
+        blob = blob[:i] + bytes([blob[i] ^ 0xFF]) + blob[i + 1:]
+    elif damage == "bitflip_magic":
+        blob = b"X" + blob[1:]
+    elif damage == "empty":
+        blob = b""
+    with open(path, "wb") as f:
+        f.write(blob)
+    kg, stats, store = _load_fresh(tmp_path)
+    assert stats["store_hits"] == 0
+    assert stats["store_rejects"] == 1 and store.rejects == 1
+    np.testing.assert_array_equal(kg.to_codes(), codes)
+    # the fresh compile wrote a VALID entry back over the corpse
+    header, payloads = read_container(path)
+    assert header["version"] == FORMAT_VERSION and NATIVE in payloads
+
+
+@pytest.mark.parametrize("field,value", [
+    ("jax", "0.0.0-other"), ("jaxlib", "0.0.0-other"),
+    ("backend", "not-a-backend"), ("device_kind", "alien"),
+    ("device_count", 4096), ("format", FORMAT_VERSION + 1)])
+def test_envelope_mismatch_rejected(tmp_path, field, value):
+    """An entry whose compatibility envelope differs in ANY field — wrong
+    jax/jaxlib, another backend or device kind/count, a future format —
+    must reject (a serialized executable is only valid under the runtime
+    that produced it), then recompile correctly."""
+    path, codes = _populate_tiny(tmp_path)
+    header, payloads = read_container(path)
+    header["envelope"][field] = value
+    write_container(path, header, payloads)
+    kg, stats, store = _load_fresh(tmp_path)
+    assert stats["store_hits"] == 0 and stats["store_rejects"] == 1
+    assert any("envelope mismatch" in r for r in store.reject_reasons)
+    np.testing.assert_array_equal(kg.to_codes(), codes)
+
+
+def test_header_key_mismatch_rejected(tmp_path):
+    """A container whose self-declared key disagrees with its filename
+    (e.g. a mis-copied store) rejects rather than serving a foreign
+    plan."""
+    path, codes = _populate_tiny(tmp_path)
+    header, payloads = read_container(path)
+    header["key"] = "0" * 64
+    write_container(path, header, payloads)
+    kg, stats, store = _load_fresh(tmp_path)
+    assert stats["store_rejects"] == 1
+    assert any("key mismatch" in r for r in store.reject_reasons)
+    np.testing.assert_array_equal(kg.to_codes(), codes)
+
+
+def test_unloadable_payloads_reject_then_recompile(tmp_path):
+    """Entries whose payload bytes pass checksums but are not loadable
+    executables (checksum recomputed over garbage) reject at rehydration
+    and the session recompiles."""
+    path, codes = _populate_tiny(tmp_path)
+    header, _payloads = read_container(path)
+    garbage = {NATIVE: b"not a pickle", STABLEHLO: b"not stablehlo"}
+    write_container(path, header, garbage)   # recomputes payload checksums
+    kg, stats, store = _load_fresh(tmp_path)
+    assert stats["store_hits"] == 0 and stats["store_rejects"] == 1
+    assert any("rehydrate" in r for r in store.reject_reasons)
+    np.testing.assert_array_equal(kg.to_codes(), codes)
+
+
+def test_unwritable_store_root_counts_write_errors(tmp_path):
+    """A store root that cannot be created (here: parented by a regular
+    file — robust even when tests run as root, where chmod is advisory)
+    must not take the session down: the compile succeeds, the KG is
+    exact, and ``stats()['plan_store']`` reports the write failure."""
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    clear_plan_cache()
+    store = PlanStore(str(blocker / "store"))
+    session = KGEngine(_tiny_dis(), plan_store=store)
+    kg, stats = session.create_kg()
+    ps = session.stats()["plan_store"]
+    assert ps["writes"] == 0 and ps["write_errors"] >= 1
+    assert ps["entries"] == 0
+    kg_ref, _ = RDFizer(_tiny_dis())()
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+
+
+def test_concurrent_writer_lock_skips_then_succeeds(tmp_path):
+    """A held per-entry flock makes a second writer SKIP (counted), not
+    block or corrupt; once released, the write lands and loads back."""
+    import fcntl
+    store = PlanStore(str(tmp_path))
+    env = store_envelope()
+    key = "ab" * 32
+    os.makedirs(store.root, exist_ok=True)
+    lock_fd = os.open(store.entry_path(key) + ".lock",
+                      os.O_CREAT | os.O_RDWR, 0o644)
+    fcntl.flock(lock_fd, fcntl.LOCK_EX)
+    try:
+        assert store.save(key, env, {"m": 1}, {NATIVE: b"x"}) is False
+        assert store.write_skipped == 1 and store.writes == 0
+    finally:
+        os.close(lock_fd)
+    assert store.save(key, env, {"m": 1}, {NATIVE: b"x"}) is True
+    res = store.load(key, env)
+    assert res.status == "hit" and res.payloads[NATIVE] == b"x"
+
+
+def test_concurrent_writer_race_never_tears(tmp_path):
+    """N threads hammering the same entry: every attempt either lands
+    atomically or skips; the surviving file always parses + checksums."""
+    store = PlanStore(str(tmp_path))
+    env = store_envelope()
+    key = "cd" * 32
+    n = 8
+    payloads = [f"payload-{i}".encode() * 100 for i in range(n)]
+
+    def writer(i):
+        PlanStore(str(tmp_path)).save(key, env, {"i": i},
+                                      {NATIVE: payloads[i]})
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    header, got = read_container(store.entry_path(key))
+    assert got[NATIVE] in payloads           # exactly one writer's bytes
+    assert header["key"] == key
+    res = store.load(key, env)
+    assert res.status == "hit"
+    # no temp droppings left behind
+    assert [f for f in os.listdir(store.root) if ".tmp." in f] == []
+
+
+def test_max_entries_prunes_oldest(tmp_path):
+    store = PlanStore(str(tmp_path), max_entries=2)
+    env = store_envelope()
+    for i in range(4):
+        key = f"{i:02d}" * 32
+        assert store.save(key, env, {"i": i}, {NATIVE: b"z"})
+        os.utime(store.entry_path(key), (i, i))   # deterministic mtimes
+    assert len(store) == 2
+    kept = sorted(os.listdir(store.root))
+    assert f"{3:02d}" * 32 + ".plan" in kept
+
+
+def test_resolve_store_argument_forms(tmp_path):
+    assert resolve_store(None) is None
+    assert resolve_store(False) is None
+    s = PlanStore(str(tmp_path))
+    assert resolve_store(s) is s
+    assert resolve_store(str(tmp_path)).root == str(tmp_path)
+    assert resolve_store(tmp_path).root == str(tmp_path)
+    with pytest.raises(TypeError):
+        resolve_store(123)
+
+
+def test_store_disabled_by_default(tmp_path):
+    """No ``plan_store=`` → no disk IO, stats report the tier as absent."""
+    clear_plan_cache()
+    session = KGEngine(_tiny_dis())
+    session.create_kg()
+    st = session.stats()
+    assert st["plan_store"] is None
+    assert st["store_hits"] == 0 and st["store_misses"] == 0
+
+
+def test_overflow_recompile_writes_back_bigger_entry(tmp_path):
+    """The overflow ladder's recompile (bigger monotone caps) replaces
+    the store entry under the SAME session key — a fresh process then
+    rehydrates the big-capacity executable directly and serves the grown
+    extension with zero recompiles."""
+    from repro.data.synthetic import make_group_b_dis
+    from repro.relalg import Table
+
+    def mk():
+        return make_group_b_dis(24, 0.6, seed=11)
+
+    clear_plan_cache()
+    store = PlanStore(str(tmp_path))
+    session = KGEngine(mk(), plan_store=store)
+    session.create_kg()
+    ext = make_group_b_dis(24 * 16, 0.6, seed=42)
+    recs = ext.sources["gene"].to_records(ext.vocab)
+    kg, stats = session.ingest({"gene": Table.from_records(
+        recs, mk().sources["gene"].attrs, session.vocab)})
+    assert stats["recompiles"] == 1     # crossed the bucket: ladder fired
+    assert store.writes >= 2            # ... and wrote the bigger entry back
+    # fresh "process" (cleared LRU): the grown sources' key hits the store
+    clear_plan_cache()
+    store2 = PlanStore(str(tmp_path))
+    session2 = KGEngine(mk(), plan_store=store2)
+    session2.sources.update(session.sources)
+    kg2, stats2 = session2.create_kg()
+    assert stats2["store_hits"] == 1 and stats2["recompiles"] == 0
+    np.testing.assert_array_equal(kg2.to_codes(), kg.to_codes())
+
+
+# ---------------------------------------------------------------------------
+# CI leg: tests against the store the workflow populated in a prior step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not os.environ.get("REPRO_PLAN_STORE_PREPOPULATED"),
+                    reason="CI plan-store leg only (populate step 1 sets "
+                           "REPRO_PLAN_STORE_PREPOPULATED)")
+@pytest.mark.parametrize("engine,dedup,mesh", [
+    ("sdm", "hash", False), ("sdm", "lex", False),
+    ("rmlmapper", "hash", False), ("rmlmapper", "lex", False),
+    ("sdm", "hash", True)])
+def test_ci_prepopulated_store_serves_every_config(engine, dedup, mesh):
+    """Step 2 of the CI plan-store leg: `python -m repro.api.store
+    populate` ran in a separate process (step 1); every configuration it
+    compiled must now load as a store hit and match the eager oracle."""
+    from repro.data.synthetic import make_group_b_dis
+    from repro.launch.mesh import make_mesh
+    import jax
+    clear_plan_cache()
+    kwargs = dict(engine=engine, dedup=dedup, plan_store="default")
+    if mesh:
+        kwargs["mesh"] = make_mesh((jax.device_count(),), ("data",))
+    session = KGEngine(make_group_b_dis(48, 0.6, seed=0), **kwargs)
+    kg, stats = session.create_kg()
+    assert stats["store_hits"] == 1, session.stats()["plan_store"]
+    assert stats["store_rejects"] == 0
+    acc = session._dis.copy()
+    acc.sources = dict(session.sources)
+    kg_ref, _ = RDFizer(acc, engine, dedup=dedup)()
+    np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
