@@ -1,0 +1,110 @@
+"""Radix-partition micro-benchmark: sort-based vs histogram-scatter kernel.
+
+Paper mapping: every cross-device operator — the all_to_all join exchange
+and the global-δ repartition behind the scaled-up integration numbers —
+starts with the same local step: bucket this shard's rows by target shard.
+This sweep isolates that step and compares
+
+* ``sort``  — the historical path (stable ``lax.sort`` on the target id +
+              ``searchsorted`` boundaries + scatter,
+              :func:`repro.core.distributed._partition_local_sorted`),
+* ``radix`` — the one-pass histogram → prefix-sum → scatter kernel package
+              (:func:`repro.kernels.radix_partition.radix_partition`;
+              Pallas on TPU, jnp oracle elsewhere),
+
+over an N × K × n_buckets grid of random code matrices, recording warm
+rows/sec per cell (best-of-R jitted calls) and asserting the two paths are
+bit-identical (buckets, counts and overflow flag) before timing anything.
+Artifacts land in ``experiments/bench/partition.json``.
+
+Run: ``PYTHONPATH=src python -m benchmarks.partition [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.distributed import _partition_local_sorted
+from repro.kernels.radix_partition import radix_partition
+
+from .common import print_csv, save_rows, timeit
+
+GRID_N = (4096, 16384, 65536)
+GRID_K = (2, 5, 8)
+GRID_B = (4, 8, 16)               # n_buckets = target shard counts
+SMOKE_N, SMOKE_K, SMOKE_B = (2048,), (3,), (8,)
+
+
+def make_rows(n: int, k: int, seed: int = 0) -> np.ndarray:
+    """[n, k] int32 codes (uniform — every bucket gets ~n/n_buckets rows)."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 20, size=(n, k)).astype(np.int32)
+
+
+def _cap_bucket(n: int, n_buckets: int) -> int:
+    """Comfortable per-bucket capacity for uniform rows (~2x the mean)."""
+    return max(8, (2 * n) // n_buckets)
+
+
+def _warm_rows_per_sec(fn, n: int, repeats: int = 3) -> float:
+    def call():
+        buckets, counts, overflow = fn()
+        buckets.block_until_ready()
+    call()                     # compile
+    return n / max(timeit(call, repeats=repeats), 1e-9)
+
+
+def run(ns=GRID_N, ks=GRID_K, n_buckets=GRID_B, seed: int = 0,
+        repeats: int = 3) -> List[Dict]:
+    rows_out: List[Dict] = []
+    for n in ns:
+        for k in ks:
+            for nb in n_buckets:
+                codes = jax.numpy.asarray(make_rows(n, k, seed))
+                count = jax.numpy.int32(n)
+                cb = _cap_bucket(n, nb)
+                sort_fn = jax.jit(functools.partial(
+                    _partition_local_sorted, codes, count, nb, cb, None))
+                radix_fn = jax.jit(functools.partial(
+                    radix_partition, codes, count,
+                    n_buckets=nb, cap_bucket=cb))
+                sb, sc, so = jax.device_get(sort_fn())
+                rb, rc, ro = jax.device_get(radix_fn())
+                assert bool(so) == bool(ro) and not bool(ro), (n, k, nb)
+                assert (sc == rc).all() and (sb == rb).all(), (n, k, nb)
+                rec = {
+                    "n": n, "k": k, "n_buckets": nb, "cap_bucket": cb,
+                    "config": "partition",
+                    "sort_rows_per_s": round(_warm_rows_per_sec(
+                        sort_fn, n, repeats)),
+                    "radix_rows_per_s": round(_warm_rows_per_sec(
+                        radix_fn, n, repeats)),
+                }
+                rec["radix_speedup"] = round(
+                    rec["radix_rows_per_s"]
+                    / max(rec["sort_rows_per_s"], 1), 2)
+                rows_out.append(rec)
+    return rows_out
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny cell (CI): N=2048, K=3, buckets=8")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        rows = run(SMOKE_N, SMOKE_K, SMOKE_B, repeats=2)
+    else:
+        rows = run(repeats=args.repeats)
+    save_rows("partition", rows)
+    print_csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -52,6 +52,9 @@ METRICS: List[Tuple[str, str, str]] = [
     # cold compile that populated it (docs/plan_store.md — gated ≥10× in
     # the bench itself; the 2x threshold here catches store-path rot)
     ("engine", "warm_process_cold_start", "warm_speedup"),
+    # the radix bucketization kernel behind every exchange/global-δ (the
+    # sort-path comparison is asserted bit-identical inside the bench)
+    ("partition", "partition", "radix_rows_per_s"),
 ]
 
 

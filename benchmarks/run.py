@@ -7,6 +7,7 @@
   * table1      — paper Table 1: source-size reduction by pre-processing
   * motivating  — paper Fig. 1: the duplicate blow-up
   * dedup       — δ operator sweep: lex vs hash-first vs distributed
+  * partition   — local shard bucketization: sort path vs radix kernel
   * planner     — eager fixpoint vs optimizing planner (docs/planner.md)
   * engine      — KGEngine sessions: cold vs cached vs ingest (docs/engine.md)
   * roofline    — collated §Roofline table (from dry-run artifacts)
@@ -28,14 +29,14 @@ def main(argv=None) -> int:
                          "(1.0 = the scaled-down paper testbed)")
     ap.add_argument("--only", default="",
                     help="comma list: group_a,group_b,table1,motivating,"
-                         "dedup,planner,engine,roofline")
+                         "dedup,partition,planner,engine,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny cell per group (CI)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from . import dedup, engine, group_a, group_b, motivating, planner, \
-        roofline, table1
+    from . import dedup, engine, group_a, group_b, motivating, partition, \
+        planner, roofline, table1
 
     if args.smoke:
         from repro.configs.mapsdi_paper import CONFIG as PAPER
@@ -58,6 +59,7 @@ def main(argv=None) -> int:
                 scale=0.02, volumes=PAPER.volumes[:1]))),
             ("motivating", lambda: motivating.main(["--rows", "120"])),
             ("dedup", lambda: dedup.main(["--smoke"])),
+            ("partition", lambda: partition.main(["--smoke"])),
             ("planner", lambda: planner.main(["--smoke"])),
             ("engine", lambda: engine.main(["--smoke"])),
             ("roofline", lambda: roofline.main([])),
@@ -70,6 +72,7 @@ def main(argv=None) -> int:
             ("motivating", lambda: motivating.main(
                 ["--rows", str(max(200, int(4000 * args.scale)))])),
             ("dedup", lambda: dedup.main([])),
+            ("partition", lambda: partition.main([])),
             ("planner", lambda: planner.main(
                 ["--scale", str(args.scale)])),
             ("engine", lambda: engine.main(

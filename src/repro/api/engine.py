@@ -153,13 +153,25 @@ class KGEngine:
         silently degrades to a fresh compile — counted in ``stats()`` as
         ``store_rejects``, never a crash, never a wrong KG. Requires
         ``jit=True`` (eager sessions skip the store).
+    calibrate
+        Measured-bandwidth cost model (ignored without a mesh). ``True``
+        microbenchmarks ``all_gather``/``all_to_all`` over the mesh axis
+        once at session start (memoized per process and mesh) and prices
+        every ⋈ exchange with the fitted bandwidths and launch constant
+        instead of the static v5e datasheet numbers; a
+        :class:`repro.launch.mesh.Calibration` instance injects known
+        numbers. The calibration signature joins the plan-cache key and
+        the persistent-store envelope, so calibrated and static plans
+        (or plans measured under different link speeds) never collide.
+        ``explain()`` shows the provenance as each ⋈ line's ``cost=`` bit.
     """
 
     def __init__(self, dis: DIS, engine: str = "sdm",
                  dedup: Optional[str] = None, *, optimize: bool = True,
                  mode: str = "exact", slack: float = 1.0, mesh=None,
                  mesh_axis: str = "data", jit: bool = True,
-                 join_exchange: str = "auto", plan_store=None):
+                 join_exchange: str = "auto", plan_store=None,
+                 calibrate=False):
         from repro.plan.annotate import JOIN_EXCHANGES
         if engine not in ("rmlmapper", "sdm"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -169,6 +181,19 @@ class KGEngine:
             raise ValueError(f"unknown join exchange {join_exchange!r} "
                              f"(expected one of {JOIN_EXCHANGES})")
         self.join_exchange = join_exchange
+        # measured-bandwidth cost model: ``True`` runs the session-start
+        # collective microbenchmark once per mesh (memoized process-wide);
+        # a Calibration instance injects known numbers (tests/replays);
+        # False (default) keeps the static datasheet constants. The
+        # calibration signature joins the plan-cache key and the store
+        # envelope, so plans priced under different link speeds never
+        # collide.
+        self.calibration = None
+        if mesh is not None and calibrate is not False:
+            from repro.launch.mesh import Calibration, calibrate_mesh
+            self.calibration = (calibrate if isinstance(calibrate,
+                                                        Calibration)
+                                else calibrate_mesh(mesh, mesh_axis))
         self.engine = engine
         self.dedup = dedup
         self._store = resolve_store(plan_store)
@@ -254,7 +279,8 @@ class KGEngine:
             cap_locals=self._cap_locals(self.sources), mode=self.mode,
             slack=self.slack, cap_fn=bucket_cap, sources=self.sources,
             join_exchange=self.join_exchange,
-            safe_exchange=self._safe_exchange)
+            safe_exchange=self._safe_exchange,
+            calibration=self.calibration)
         return dump_plan(self._plan, self.engine, counts, caps, exchanges)
 
     def _source_sig(self, sources: Mapping[str, Table]) -> Tuple:
@@ -290,9 +316,11 @@ class KGEngine:
         drift never invalidates a cached closure)."""
         if self.mesh is None:
             return None
+        cal_sig = (None if self.calibration is None
+                   else self.calibration.signature())
         return self._mesh_static + (
             tuple(sorted(self._cap_locals(sources).items())),
-            len(self._dis.vocab) < (1 << 16), self.join_exchange)
+            len(self._dis.vocab) < (1 << 16), self.join_exchange, cal_sig)
 
     def _key(self, sources: Mapping[str, Table]) -> Tuple:
         return (self._ir_fp, self._emit_sig, self.engine, self.dedup,
@@ -361,7 +389,8 @@ class KGEngine:
                 mode=mode or self.mode, slack=self.slack,
                 cap_fn=bucket_cap, sources=sources,
                 join_exchange=self.join_exchange,
-                safe_exchange=safe_exchange)
+                safe_exchange=safe_exchange,
+                calibration=self.calibration)
             if floor_caps:
                 caps = {n_: max(c, floor_caps.get(n_, 0))
                         for n_, c in caps.items()}
@@ -405,7 +434,7 @@ class KGEngine:
         raised (a full disk must not take the session down)."""
         store = self._store
         try:
-            env = store_envelope()
+            env = store_envelope(self.calibration)
             skey = store_key(entry.key, env)
             payloads = {NATIVE: serialize_native(entry.fn)}
             if store.portable:
@@ -426,7 +455,7 @@ class KGEngine:
         if store is None or not self.jit:
             return None
         try:
-            env = store_envelope()
+            env = store_envelope(self.calibration)
             skey = store_key(key, env)
         except TypeError:       # a non-canonical key component: no store
             self._store_rejects += 1
@@ -721,6 +750,14 @@ class KGEngine:
             "engine": self.engine, "dedup": self.dedup, "mode": self.mode,
             "slack": self.slack, "optimize": self.optimize,
             "join_exchange": self.join_exchange,
+            "cost_model": ("static" if self.calibration is None
+                           else self.calibration.source),
+            "calibration": (None if self.calibration is None else {
+                "all_gather_bw": self.calibration.all_gather_bw,
+                "all_to_all_bw": self.calibration.all_to_all_bw,
+                "launch_s": self.calibration.launch_s,
+                "source": self.calibration.source,
+            }),
             "executions": self._executions, "ingests": self._ingests,
             "ingested_rows": self._ingested_rows,
             "recompiles": self._recompiles,

@@ -72,7 +72,10 @@ from typing import Dict, List, Mapping, Optional, Tuple
 import jax
 
 MAGIC = b"RPLNSTR1"
-FORMAT_VERSION = 1
+# v2: exchange records carry the cost-model provenance (``cost_source``)
+# and the envelope may carry a collective-bandwidth calibration tag, so
+# plans costed under measured link speeds never collide with static ones.
+FORMAT_VERSION = 2
 
 #: payload names inside an entry container
 NATIVE, STABLEHLO = "native", "stablehlo"
@@ -111,18 +114,30 @@ def canonical(obj) -> str:
         f"make the key irreproducible across workers")
 
 
-def store_envelope() -> Dict[str, object]:
-    """The runtime facts a serialized executable is only valid under."""
+def store_envelope(calibration=None) -> Dict[str, object]:
+    """The runtime facts a serialized executable is only valid under.
+
+    ``calibration`` (a :class:`repro.launch.mesh.Calibration` or None)
+    tags the envelope with the cost model's bandwidth provenance: a plan
+    whose exchange strategies were chosen under measured link speeds must
+    not rehydrate into a session costing with the static constants (or
+    with a materially different measurement) — calibration drift is an
+    envelope mismatch, rejected on load like any other runtime mismatch.
+    """
     import jaxlib
     devices = jax.devices()
-    return {
+    env = {
         "format": FORMAT_VERSION,
         "jax": jax.__version__,
         "jaxlib": jaxlib.__version__,
         "backend": jax.default_backend(),
         "device_kind": devices[0].device_kind,
         "device_count": jax.device_count(),
+        "calibration": "static",
     }
+    if calibration is not None and calibration.source != "static":
+        env["calibration"] = canonical(calibration.signature())
+    return env
 
 
 def _envelope_json(envelope: Mapping[str, object]) -> str:
@@ -220,7 +235,8 @@ def pack_entry_meta(entry, plan) -> Dict[str, object]:
         meta["exchanges"] = sorted(
             [index[n], x.strategy, int(x.gather_bytes),
              int(x.repartition_bytes), float(x.gather_seconds),
-             float(x.repartition_seconds)]
+             float(x.repartition_seconds),
+             getattr(x, "cost_source", "static")]
             for n, x in (entry.exchanges or {}).items())
     return meta
 
@@ -251,8 +267,9 @@ def unpack_entry_meta(meta: Mapping[str, object], plan) -> Dict[str, object]:
             order[i]: JoinExchange(strategy=s, gather_bytes=int(gb),
                                    repartition_bytes=int(rb),
                                    gather_seconds=float(gs),
-                                   repartition_seconds=float(rs))
-            for i, s, gb, rb, gs, rs in meta.get("exchanges", [])}
+                                   repartition_seconds=float(rs),
+                                   cost_source=str(src))
+            for i, s, gb, rb, gs, rs, src in meta.get("exchanges", [])}
     return out
 
 

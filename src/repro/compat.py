@@ -25,7 +25,16 @@ def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check_vma=None):
     ``axis_names`` (manual axes; default: all mesh axes) and ``check_vma``
     are translated for the pre-0.6 ``jax.experimental.shard_map`` signature
     (``auto`` = complement of the manual axes, ``check_rep``).
+
+    When ``REPRO_PALLAS_INTERPRET`` forces interpret-mode Pallas kernels
+    into the distributed bodies (the CI interpret leg), the replication
+    check defaults to off: ``pallas_call`` has no replication rule, and
+    every collective body here produces explicitly sharded outputs anyway.
     """
+    if check_vma is None:
+        from repro.kernels import pallas_interpret_forced
+        if pallas_interpret_forced():
+            check_vma = False
     if _NEW_SHARD_MAP:
         kw = {}
         if axis_names is not None:

@@ -41,6 +41,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.kernels.radix_partition import radix_partition
 from repro.kernels.rowhash import rowhash, rowhash_ref
 from repro.relalg import PAD_ID, Table
 from repro.relalg.ops import compact, dedup_rows
@@ -62,6 +63,26 @@ def _partition_local(data: jax.Array, count: jax.Array, n_shards: int,
     equal keys land on one shard. Returns (buckets
     [n_shards, cap_bucket, K], bucket_counts [n_shards], overflowed scalar
     bool).
+
+    Backed by the radix-partition kernel package (one-pass histogram →
+    prefix-sum → scatter; Pallas on TPU, jnp oracle elsewhere), which is
+    bit-identical to the historical :func:`_partition_local_sorted` — the
+    sort-based body kept as the differential-test/benchmark reference.
+    """
+    return radix_partition(
+        data, count, n_buckets=n_shards, cap_bucket=cap_bucket,
+        key_cols=None if key_cols is None else tuple(key_cols),
+        use_pallas=use_pallas)
+
+
+def _partition_local_sorted(data: jax.Array, count: jax.Array, n_shards: int,
+                            cap_bucket: int, use_pallas: Optional[bool],
+                            key_cols: Optional[Tuple[int, ...]] = None
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Historical sort-based bucketization (stable ``lax.sort`` on the
+    target + ``searchsorted`` boundaries + scatter). Superseded by the
+    radix kernel in :func:`_partition_local`; retained as the oracle the
+    differential tests and ``benchmarks/partition.py`` compare against.
     """
     cap_local, k = data.shape
     valid = jnp.arange(cap_local, dtype=jnp.int32) < count

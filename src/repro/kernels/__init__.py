@@ -1,3 +1,55 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared backend gating for every kernel package's dispatcher.
+
+Each ``ops.py`` dispatcher resolves its ``use_pallas=None`` default the
+same way; the resolution lives here (instead of per-package ``_on_tpu``
+copies) so the policy — and the CI interpret-mode override — is defined
+exactly once:
+
+* ``on_tpu()`` — the Pallas kernels target real TPUs; elsewhere the
+  pure-jnp oracle is the faster *and* always-available path.
+* ``REPRO_PALLAS_INTERPRET=1`` forces ``use_pallas=None`` to resolve True
+  off-TPU too, running the kernel **bodies** through the Pallas
+  interpreter (``pallas_call(interpret=True)``) — the CI leg that
+  exercises the real kernel code on CPU runners instead of only the
+  oracles. Explicit ``use_pallas=True/False`` is always honored.
+
+No kernel subpackage is imported here: consumers import
+``repro.kernels.<pkg>`` directly, which keeps this module dependency-free
+(and cycle-free — relalg imports kernels, never the reverse).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True iff the default jax backend is a real TPU."""
+    return jax.default_backend() == "tpu"
+
+
+def pallas_interpret_forced() -> bool:
+    """True iff ``$REPRO_PALLAS_INTERPRET`` requests interpret-mode kernels
+    (read per call: tests toggle it with ``monkeypatch.setenv``)."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "").strip() \
+        not in ("", "0", "false", "no")
+
+
+def resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
+    """The single ``use_pallas=None`` policy: kernels on TPU, oracles
+    elsewhere — unless the interpret-mode env flag opts the kernel bodies
+    in on CPU."""
+    if use_pallas is None:
+        return on_tpu() or pallas_interpret_forced()
+    return bool(use_pallas)
+
+
+def pallas_interpret() -> bool:
+    """Whether a Pallas call taken off-TPU must run interpreted (always:
+    only a real TPU executes compiled Mosaic)."""
+    return not on_tpu()

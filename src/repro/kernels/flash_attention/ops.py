@@ -5,12 +5,10 @@ from typing import Optional
 
 import jax
 
+from repro.kernels import pallas_interpret, resolve_use_pallas
+
 from .flash_attention import flash_attention_pallas
 from .ref import attention_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -19,12 +17,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     kv_len: Optional[int] = None,
                     use_pallas: Optional[bool] = None,
                     block_q: int = 128, block_k: int = 128) -> jax.Array:
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if resolve_use_pallas(use_pallas):
         return flash_attention_pallas(
             q, k, v, causal=causal, window=window, scale=scale,
             kv_len=kv_len, block_q=block_q, block_k=block_k,
-            interpret=not _on_tpu())
+            interpret=pallas_interpret())
     return attention_ref(q, k, v, causal=causal, window=window, scale=scale,
                          kv_len=kv_len)

@@ -6,12 +6,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import pallas_interpret, resolve_use_pallas
+
 from .mamba2 import mamba2_ssd_pallas
 from .ref import ssd_chunked
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def mamba2_ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
@@ -21,12 +19,11 @@ def mamba2_ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     """Mamba2 SSD. x [B,H,T,P]; dt [B,H,T]; a [H]; b/c [B,T,N]. The Pallas
     path handles the zero-initial-state (train/prefill) case; carried-state
     calls (decode) use the chunked jnp path."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+    use_pallas = resolve_use_pallas(use_pallas)
     if use_pallas and state is None and x.shape[2] % chunk == 0:
         la = dt.astype(jnp.float32) * a.astype(jnp.float32)[None, :, None]
         xdt = (x.astype(jnp.float32)
                * dt.astype(jnp.float32)[..., None]).astype(x.dtype)
         return mamba2_ssd_pallas(xdt, la, b, c, chunk=chunk,
-                                 interpret=not _on_tpu())
+                                 interpret=pallas_interpret())
     return ssd_chunked(x, dt, a, b, c, state, chunk=chunk)

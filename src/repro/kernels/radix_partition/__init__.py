@@ -1,0 +1,20 @@
+"""Radix partition of coded rows into fixed-capacity hash buckets.
+
+``ops.radix_partition`` is the entry point; ``ref`` holds the pure-jnp
+oracle and ``radix_partition`` the Pallas TPU kernel. Used by the
+all_to_all join exchange / global-δ repartition
+(:mod:`repro.core.distributed`) and by the bucketed hash-δ path
+(:func:`repro.relalg.ops.distinct_rows_hashed`).
+"""
+from .ops import kernel_feasible, radix_partition
+from .radix_partition import radix_partition_pallas
+from .ref import bucket_shift, bucket_targets_ref, radix_partition_ref
+
+__all__ = [
+    "bucket_shift",
+    "bucket_targets_ref",
+    "kernel_feasible",
+    "radix_partition",
+    "radix_partition_pallas",
+    "radix_partition_ref",
+]

@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for the radix partition: histogram → exclusive
+prefix-sum → scatter, with output semantics bit-identical to the historical
+sort-based bucketization in ``repro.core.distributed`` (stable within-bucket
+order = original row order; overflowing rows dropped with the flag raised,
+never silently).
+
+Two bucketization modes share one pipeline:
+
+* ``order_preserving=False`` (default) — ``target = rowhash(row) %
+  n_buckets``: the exchange mode. This is *the* shard-assignment function of
+  ``repartition_by_key``, so the kernel, the oracle and the old sort path
+  must (and do) agree bit-for-bit on which shard every row travels to.
+* ``order_preserving=True`` — ``target = rowhash(row) >> (32 - log2
+  n_buckets)`` (``n_buckets`` a power of two): bucket index = the hash's
+  top bits, so concatenating the buckets in index order yields rows in
+  globally non-decreasing hash order. The δ partition stage
+  (:func:`repro.relalg.ops.distinct_rows_hashed`) needs exactly this —
+  a per-bucket hash sort then reproduces the single global hash sort's
+  row order, keeping the hash-δ output canonical.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rowhash.ref import rowhash_ref
+
+#: padding sentinel — must equal :data:`repro.relalg.PAD_ID` (kernels may
+#: not import relalg: relalg already imports kernels). Pinned by a test.
+PAD_ID = 2**31 - 1
+
+
+def bucket_shift(n_buckets: int) -> int:
+    """Top-bits shift for ``order_preserving`` mode; validates the
+    power-of-two requirement."""
+    bits = int(n_buckets).bit_length() - 1
+    if n_buckets != 1 << bits:
+        raise ValueError(f"order-preserving radix partition needs a "
+                         f"power-of-two bucket count, got {n_buckets}")
+    return 32 - bits
+
+
+def bucket_targets_ref(data: jax.Array, count: jax.Array, n_buckets: int,
+                       key_cols: Optional[Tuple[int, ...]] = None,
+                       order_preserving: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """(masked data, per-row target bucket) — invalid rows are forced to
+    PAD rows and get the sentinel target ``n_buckets``."""
+    cap_local, _ = data.shape
+    valid = jnp.arange(cap_local, dtype=jnp.int32) < count
+    masked = jnp.where(valid[:, None], data, jnp.int32(PAD_ID))
+    keyed = masked if key_cols is None else masked[:, jnp.asarray(key_cols)]
+    h = rowhash_ref(keyed)
+    if order_preserving:
+        t = (h >> jnp.uint32(bucket_shift(n_buckets))).astype(jnp.int32)
+    else:
+        t = (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+    return masked, jnp.where(valid, t, jnp.int32(n_buckets))
+
+
+def radix_partition_ref(data: jax.Array, count: jax.Array, *,
+                        n_buckets: int, cap_bucket: int,
+                        key_cols: Optional[Tuple[int, ...]] = None,
+                        order_preserving: bool = False
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Partition ``data[cap_local, K]``'s ``count`` valid rows into
+    ``n_buckets`` fixed-capacity buckets by key hash.
+
+    Returns ``(buckets [n_buckets, cap_bucket, K], counts [n_buckets],
+    overflow scalar bool)``: rows within a bucket keep their original
+    relative order, unused bucket slots are PAD rows, ``counts`` are
+    clamped to ``cap_bucket``, and ``overflow`` is True iff any bucket's
+    true occupancy exceeded ``cap_bucket`` (the dropped-rows flag the
+    caller must surface — rows are never dropped silently).
+    """
+    _, k = data.shape
+    masked, target = bucket_targets_ref(data, count, n_buckets, key_cols,
+                                        order_preserving)
+    onehot = (target[:, None]
+              == jnp.arange(n_buckets, dtype=jnp.int32)[None, :]
+              ).astype(jnp.int32)
+    # exclusive running count of same-bucket predecessors = the row's slot
+    rank = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=1)
+    counts = jnp.sum(onehot, axis=0)
+    overflow = jnp.any(counts > cap_bucket)
+    ok = (target < n_buckets) & (rank < cap_bucket)
+    dest = jnp.where(ok, target * cap_bucket + rank,
+                     jnp.int32(n_buckets * cap_bucket))
+    flat = jnp.full((n_buckets * cap_bucket, k), jnp.int32(PAD_ID))
+    flat = flat.at[dest].set(masked, mode="drop")
+    return (flat.reshape(n_buckets, cap_bucket, k),
+            jnp.minimum(counts, cap_bucket), overflow)

@@ -5,21 +5,18 @@ from typing import Tuple
 
 import jax
 
+from repro.kernels import pallas_interpret, resolve_use_pallas
+
 from .ref import hash_neighbor_flags_ref, rowhash_ref
 from .rowhash import hash_neighbor_flags_pallas, rowhash_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def rowhash(x: jax.Array, *, use_pallas: bool | None = None,
             block_n: int = 256) -> jax.Array:
     """[N, K] int32 -> [N] uint32 row hashes (kernel on TPU, ref elsewhere)."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
-        return rowhash_pallas(x, block_n=block_n, interpret=not _on_tpu())
+    if resolve_use_pallas(use_pallas):
+        return rowhash_pallas(x, block_n=block_n,
+                              interpret=pallas_interpret())
     return rowhash_ref(x)
 
 
@@ -31,9 +28,7 @@ def hash_neighbor_flags(rows: jax.Array, *, use_pallas: bool | None = None,
     Kernel on TPU, pure-jnp oracle elsewhere (the Pallas interpreter is far
     slower than the oracle for this memory-bound pass).
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if resolve_use_pallas(use_pallas):
         return hash_neighbor_flags_pallas(rows, block_n=block_n,
-                                          interpret=not _on_tpu())
+                                          interpret=pallas_interpret())
     return hash_neighbor_flags_ref(rows)

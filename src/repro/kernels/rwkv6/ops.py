@@ -5,12 +5,10 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.kernels import pallas_interpret, resolve_use_pallas
+
 from .ref import rwkv6_chunked, rwkv6_scan_ref
 from .rwkv6 import rwkv6_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
@@ -20,9 +18,8 @@ def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     """RWKV6 time mix. Returns (y, final_state). The Pallas path handles
     the zero-initial-state (train/prefill) case; carried-state calls
     (decode) use the chunked jnp path."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+    use_pallas = resolve_use_pallas(use_pallas)
     if use_pallas and state is None and r.shape[2] % chunk == 0:
         return rwkv6_pallas(r, k, v, w, u, chunk=chunk,
-                            interpret=not _on_tpu())
+                            interpret=pallas_interpret())
     return rwkv6_chunked(r, k, v, w, u, state, chunk=chunk)

@@ -11,8 +11,12 @@ per step.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import math
-from typing import Optional, Sequence, Tuple
+import os
+import time
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -55,3 +59,149 @@ PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s
 ICI_BW = 50e9                   # bytes/s per link (~ per exchange direction)
 HBM_BYTES = 16 * 2**30          # 16 GiB HBM per chip
+
+
+# ---------------------------------------------------------------------------
+# measured-bandwidth collective calibration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-collective bandwidth model ``t = launch_s + wire_bytes / bw``.
+
+    ``source`` records provenance: ``"static"`` = the v5e datasheet
+    constants above (the cost model's default), ``"measured"`` = fitted
+    from microbenchmarks on the live mesh by
+    :func:`measure_collective_bandwidth`. The cost model
+    (:func:`repro.plan.annotate.join_exchange_cost`) treats the two
+    identically — only the numbers (and the plan-cache signature) differ.
+    """
+    all_gather_bw: float        # bytes/s of per-shard wire bytes
+    all_to_all_bw: float        # bytes/s of per-shard wire bytes
+    launch_s: float             # fixed per-collective launch cost
+    source: str = "static"
+
+    def signature(self) -> Tuple:
+        """Hashable tag for plan-cache keys / store envelopes. Static
+        calibrations share one tag; measured ones carry their numbers, so
+        plans costed under different link speeds never collide."""
+        if self.source == "static":
+            return ("static",)
+        return (self.source, round(self.all_gather_bw),
+                round(self.all_to_all_bw), round(self.launch_s, 9))
+
+
+def static_calibration() -> Calibration:
+    """The documented-constant cost model as a :class:`Calibration`."""
+    from repro.plan.annotate import COLLECTIVE_LAUNCH_S
+    return Calibration(all_gather_bw=ICI_BW, all_to_all_bw=ICI_BW,
+                       launch_s=COLLECTIVE_LAUNCH_S, source="static")
+
+
+def _fit_line(wire_bytes: Sequence[float], seconds: Sequence[float]
+              ) -> Tuple[float, float]:
+    """Least-squares ``t = launch + bytes/bw`` -> (bw, launch)."""
+    slope, intercept = np.polyfit(np.asarray(wire_bytes, dtype=np.float64),
+                                  np.asarray(seconds, dtype=np.float64), 1)
+    if not np.isfinite(slope) or slope <= 0.0:
+        return float("nan"), float("nan")
+    return 1.0 / float(slope), max(float(intercept), 0.0)
+
+
+def _zeros(shape: Tuple[int, ...]):
+    import jax.numpy as jnp  # deferred: see module docstring
+    return jnp.zeros(shape, jnp.int32)
+
+
+def _best_seconds(fn, x, repeats: int) -> float:
+    fn(x)[0].block_until_ready()        # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(x)[0].block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_collective_bandwidth(mesh: jax.sharding.Mesh, axis: str, *,
+                                 payload_kib: Sequence[int] = (64, 256, 1024),
+                                 repeats: int = 3) -> Calibration:
+    """Microbenchmark ``all_gather`` / ``all_to_all`` over ``axis`` and fit
+    the two-parameter model ``t = launch + wire_bytes / bw``.
+
+    Wire bytes follow the cost model's convention — bytes *leaving one
+    shard*: ``(n-1) · shard_bytes`` for all_gather, ``(n-1)/n · shard_bytes``
+    for all_to_all. Degenerate fits (single-device axis, timer-noise-level
+    payloads, non-monotone timings) fall back to the static datasheet
+    calibration rather than poisoning the cost model with a garbage slope.
+    """
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    n = int(mesh.shape[axis])
+    if n < 2:
+        return static_calibration()
+    cols = 128
+
+    def gather_body(x):
+        return (lax.all_gather(x, axis, tiled=True),)
+
+    def a2a_body(x):
+        return (lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                               tiled=False),)
+
+    gather = jax.jit(shard_map(gather_body, mesh, in_specs=P(axis),
+                               out_specs=P(), check_vma=False))
+    a2a = jax.jit(shard_map(a2a_body, mesh,
+                            in_specs=P(axis, None, None),
+                            out_specs=P(axis, None, None)))
+
+    g_bytes, g_secs, a_bytes, a_secs = [], [], [], []
+    for kib in payload_kib:
+        shard_rows = max(1, (kib * 1024) // (cols * 4))
+        x = _zeros((n * shard_rows, cols))
+        g_bytes.append((n - 1) * shard_rows * cols * 4)
+        g_secs.append(_best_seconds(gather, x, repeats))
+        bucket_rows = max(1, shard_rows // n)
+        xb = _zeros((n * n, bucket_rows, cols))
+        a_bytes.append((n - 1) * bucket_rows * cols * 4)
+        a_secs.append(_best_seconds(a2a, xb, repeats))
+
+    g_bw, g_launch = _fit_line(g_bytes, g_secs)
+    a_bw, a_launch = _fit_line(a_bytes, a_secs)
+    if not (np.isfinite(g_bw) and np.isfinite(a_bw)):
+        return static_calibration()
+    return Calibration(all_gather_bw=g_bw, all_to_all_bw=a_bw,
+                       launch_s=max(g_launch, a_launch), source="measured")
+
+
+#: process-wide memo: one microbenchmark pass per (mesh population, axis)
+_CALIBRATION_CACHE: Dict[Tuple, Calibration] = {}
+
+
+def calibrate_mesh(mesh: jax.sharding.Mesh, axis: str, *,
+                   payload_kib: Sequence[int] = (64, 256, 1024),
+                   repeats: int = 3, force: bool = False) -> Calibration:
+    """Session-start calibration entry point (memoized per process).
+
+    Engines created with ``calibrate=True`` call this once per mesh; later
+    engines on the same device population reuse the fit. When
+    ``REPRO_CALIBRATION_OUT`` names a path, the fit is also dumped there as
+    JSON (CI uploads it as a debugging artifact on failure).
+    """
+    devs = tuple(str(d) for d in np.ravel(mesh.devices))
+    key = (axis, devs, tuple(payload_kib), repeats)
+    if force or key not in _CALIBRATION_CACHE:
+        _CALIBRATION_CACHE[key] = measure_collective_bandwidth(
+            mesh, axis, payload_kib=payload_kib, repeats=repeats)
+    cal = _CALIBRATION_CACHE[key]
+    out = os.environ.get("REPRO_CALIBRATION_OUT")
+    if out:
+        payload = dict(dataclasses.asdict(cal), axis=axis,
+                       n_shards=int(mesh.shape[axis]),
+                       backend=jax.default_backend())
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+    return cal

@@ -90,12 +90,14 @@ class JoinExchange:
     repartition_bytes: int
     gather_seconds: float
     repartition_seconds: float
+    cost_source: str = "static"  # "static" | "measured" bandwidth numbers
 
 
 def join_exchange_cost(child_cap_local: int, child_cols: int,
                        parent_cap_local: int, parent_cols: int,
                        n_shards: int, strategy: str = "auto",
-                       word_bytes: int = 4) -> JoinExchange:
+                       word_bytes: int = 4,
+                       calibration=None) -> JoinExchange:
     """Price the two ⋈ exchange strategies and pick one.
 
     Inputs are the SHARD-LOCAL buffer capacities (rows) and widths
@@ -111,9 +113,14 @@ def join_exchange_cost(child_cap_local: int, child_cols: int,
       collectives) — the same clamp ``compile_mesh_plan`` allocates with,
       so the estimate prices the buffers that actually cross the wire.
 
-    Wire seconds use the v5e ICI bandwidth from
+    Wire seconds default to the v5e ICI bandwidth from
     :mod:`repro.launch.mesh` plus :data:`COLLECTIVE_LAUNCH_S` per
-    collective. Repartition therefore wins exactly when the parent side is
+    collective; passing a :class:`repro.launch.mesh.Calibration` (e.g. the
+    session-start microbenchmark fit from
+    :func:`repro.launch.mesh.calibrate_mesh`) prices each collective with
+    its *measured* bandwidth and launch constant instead — the decision
+    rule is unchanged, only the numbers (and the reported ``cost_source``)
+    differ. Repartition therefore wins exactly when the parent side is
     large relative to the child (the all_gather wall), and loses on small
     relations where the per-bucket Poisson padding and the extra collective
     dominate. ``strategy`` forces the choice (``"gather"`` /
@@ -126,6 +133,15 @@ def join_exchange_cost(child_cap_local: int, child_cols: int,
     if strategy not in JOIN_EXCHANGES:
         raise ValueError(f"unknown join exchange {strategy!r} "
                          f"(expected one of {JOIN_EXCHANGES})")
+    if calibration is None:
+        gather_bw = a2a_bw = ICI_BW
+        launch_s = COLLECTIVE_LAUNCH_S
+        cost_source = "static"
+    else:
+        gather_bw = calibration.all_gather_bw
+        a2a_bw = calibration.all_to_all_bw
+        launch_s = calibration.launch_s
+        cost_source = calibration.source
     n = max(1, int(n_shards))
 
     def bucket(cap_local: int) -> int:
@@ -135,15 +151,16 @@ def join_exchange_cost(child_cap_local: int, child_cols: int,
     rep_rows = (bucket(child_cap_local) * child_cols
                 + bucket(parent_cap_local) * parent_cols)
     repartition_bytes = (n - 1) * rep_rows * word_bytes
-    gather_s = gather_bytes / ICI_BW + 1 * COLLECTIVE_LAUNCH_S
-    repartition_s = repartition_bytes / ICI_BW + 2 * COLLECTIVE_LAUNCH_S
+    gather_s = gather_bytes / gather_bw + 1 * launch_s
+    repartition_s = repartition_bytes / a2a_bw + 2 * launch_s
     if strategy == "auto":
         strategy = ("repartition" if n > 1 and repartition_s < gather_s
                     else "gather")
     return JoinExchange(strategy=strategy, gather_bytes=gather_bytes,
                         repartition_bytes=repartition_bytes,
                         gather_seconds=gather_s,
-                        repartition_seconds=repartition_s)
+                        repartition_seconds=repartition_s,
+                        cost_source=cost_source)
 
 
 def _eval_rows(node: Node, sources: Mapping[str, Table],
@@ -280,6 +297,7 @@ def annotate_local(plan: LogicalPlan, n_shards: int,
                    sources: Optional[Mapping[str, Table]] = None,
                    join_exchange: str = "gather",
                    safe_exchange: bool = False,
+                   calibration=None,
                    ) -> Tuple[Dict[Node, int], Dict[Node, int],
                               Dict[Node, JoinExchange]]:
     """Shard-local (counts, capacities, exchanges) for the fused mesh
@@ -298,7 +316,9 @@ def annotate_local(plan: LogicalPlan, n_shards: int,
     * ``exchanges[join]`` is the :class:`JoinExchange` decision of
       :func:`join_exchange_cost` under the ``join_exchange`` knob
       (``"gather"`` | ``"repartition"`` | ``"auto"``), priced from the
-      already-computed shard-local caps of the child and parent relations.
+      already-computed shard-local caps of the child and parent relations —
+      under the static datasheet constants, or under a measured
+      :class:`repro.launch.mesh.Calibration` when one is passed.
 
     **Post-exchange bounds.** The mesh executes every interior δ as a
     global hash-repartition (all copies of a row share its rowhash, so a
@@ -366,7 +386,7 @@ def annotate_local(plan: LogicalPlan, n_shards: int,
         exch = join_exchange_cost(
             caps[node.left], len(node.left.attrs),
             caps[node.right], len(node.right.attrs),
-            n_shards, strategy=join_exchange)
+            n_shards, strategy=join_exchange, calibration=calibration)
         exchanges[node] = exch
         if exch.strategy == "repartition":
             local = c if safe_exchange else poisson_shard_bound(c, n_shards)

@@ -78,6 +78,7 @@ def dump_plan(plan: LogicalPlan, engine: str = "rmlmapper",
             bits.append(f"exchange={exch.strategy}")
             bits.append(f"gather≈{_fmt_bytes(exch.gather_bytes)}")
             bits.append(f"all_to_all≈{_fmt_bytes(exch.repartition_bytes)}")
+            bits.append(f"cost={getattr(exch, 'cost_source', 'static')}")
         return ("  [" + ", ".join(bits) + "]") if bits else ""
 
     def render(node: Node, prefix: str, is_last: bool, is_root: bool):
@@ -119,7 +120,7 @@ def _multi_referenced(root: Node) -> Dict[int, int]:
 
 def explain(plan: LogicalPlan, engine: str = "rmlmapper",
             with_annotations: bool = True, n_shards: Optional[int] = None,
-            join_exchange: str = "auto") -> str:
+            join_exchange: str = "auto", calibration=None) -> str:
     """Convenience: annotate (host-side, exact) and dump the plan.
 
     With ``n_shards`` the annotation runs shard-locally
@@ -127,6 +128,9 @@ def explain(plan: LogicalPlan, engine: str = "rmlmapper",
     plan's source capacities) and every ⋈ line shows the cost model's
     exchange decision under ``join_exchange`` plus the estimated wire
     bytes per strategy — what a mesh ``KGEngine`` session would compile.
+    Each ⋈ line's ``cost=`` bit says whether those numbers came from the
+    static datasheet constants or a measured
+    :class:`repro.launch.mesh.Calibration` (pass one via ``calibration``).
     """
     if not with_annotations:
         return dump_plan(plan, engine)
@@ -140,5 +144,5 @@ def explain(plan: LogicalPlan, engine: str = "rmlmapper",
                   for name in plan_scans(plan)}
     counts, caps, exchanges = annotate_local(
         plan, n_shards=n_shards, cap_locals=cap_locals,
-        join_exchange=join_exchange)
+        join_exchange=join_exchange, calibration=calibration)
     return dump_plan(plan, engine, counts, caps, exchanges)

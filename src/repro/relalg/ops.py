@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels.radix_partition import radix_partition
 from repro.kernels.rowhash import hash_neighbor_flags, rowhash
 
 from .encoding import PAD_ID
@@ -42,6 +43,13 @@ from .table import Table
 # Engine-wide default δ strategy. "hash" is exact (collision fallback) and
 # turns the K-key sort into a single-key sort; "lex" is the classic path.
 DEFAULT_DEDUP = "hash"
+
+# The hash δ swaps its single global sort for a radix partition + per-bucket
+# sorts once the matrix has this many rows (sort cost is O(N log N); B
+# independent bucket sorts cost O(N log(N/B)) and the partition is one
+# linear kernel pass). Below the threshold the partition overhead dominates.
+RADIX_DEDUP_MIN_ROWS = 4096
+RADIX_DEDUP_BUCKETS = 8
 
 _UINT32_MAX = 0xFFFFFFFF
 
@@ -158,14 +166,24 @@ def distinct_rows(data: jax.Array, count: jax.Array
 def distinct_rows_hashed(data: jax.Array, count: jax.Array, *,
                          use_pallas: Optional[bool] = None,
                          hash_fn: Optional[Callable[[jax.Array], jax.Array]]
-                         = None) -> Tuple[jax.Array, jax.Array]:
+                         = None,
+                         radix: Optional[bool] = None
+                         ) -> Tuple[jax.Array, jax.Array]:
     """Matrix-level hash-first δ — bit-identical results to
-    :func:`distinct_rows`, one single-key sort instead of a K-key sort.
+    :func:`distinct_rows`.
 
-    Pipeline: ``rowhash`` (Pallas on TPU) -> stable single-key sort on the
-    32-bit hash carrying the row permutation -> fused hash+neighbor-flag
-    kernel (recomputes the hash, compares each sorted row to its predecessor
-    in one VMEM pass) -> first-occurrence compaction.
+    Two layouts share the hash-first idea; both end in the fused
+    hash+neighbor-flag pass and a first-occurrence compaction:
+
+    * **sorted** — one stable single-key sort on the 32-bit row hash
+      carrying the row permutation;
+    * **radix** — an order-preserving radix partition into
+      :data:`RADIX_DEDUP_BUCKETS` hash buckets (bucket = the hash's top
+      bits, so concatenated buckets stay in global hash order) followed by
+      independent per-bucket sorts. Picked automatically at
+      :data:`RADIX_DEDUP_MIN_ROWS` rows (``radix`` overrides); falls back
+      to the sorted layout on bucket overflow, so the output is a pure
+      function of the row set regardless of layout.
 
     Correctness under collisions: the keep-mask only merges *adjacent equal
     rows*, so a collision can never drop a distinct row. It could keep a
@@ -175,9 +193,25 @@ def distinct_rows_hashed(data: jax.Array, count: jax.Array, *,
     routes the whole call through the exact lex path via ``lax.cond``.
 
     ``hash_fn`` overrides the row hash (tests force collisions with it);
-    the pure-jnp flag path is used then, since the fused kernel hard-codes
-    the production hash.
+    the pure-jnp flag path and sorted layout are used then, since the
+    fused kernel and the partition kernel hard-code the production hash.
     """
+    capacity, _ = data.shape
+    if radix is None:
+        radix = hash_fn is None and capacity >= RADIX_DEDUP_MIN_ROWS
+    if radix and hash_fn is None:
+        return _distinct_hashed_radix(data, count, use_pallas=use_pallas)
+    return _distinct_hashed_sorted(data, count, use_pallas=use_pallas,
+                                   hash_fn=hash_fn)
+
+
+def _distinct_hashed_sorted(data: jax.Array, count: jax.Array, *,
+                            use_pallas: Optional[bool] = None,
+                            hash_fn: Optional[Callable[[jax.Array],
+                                                       jax.Array]] = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Single-global-sort layout of the hash δ (see
+    :func:`distinct_rows_hashed`)."""
     capacity, k = data.shape
     idx = jnp.arange(capacity, dtype=jnp.int32)
     valid_in = idx < count
@@ -212,6 +246,76 @@ def distinct_rows_hashed(data: jax.Array, count: jax.Array, *,
     return lax.cond(collision,
                     lambda: distinct_rows(data, count),
                     lambda: compact(rows, keep))
+
+
+def _radix_dedup_cap(capacity: int, n_buckets: int) -> int:
+    """Per-bucket capacity: Poisson mean + 6σ slack (same bound family as
+    ``repro.core.distributed.sink_bucket_cap``; overflow falls back)."""
+    m = capacity / n_buckets
+    return max(8, int(-(-(m + 6.0 * m ** 0.5 + 8.0) // 1)))
+
+
+def _distinct_hashed_radix(data: jax.Array, count: jax.Array, *,
+                           use_pallas: Optional[bool] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Radix-bucketed layout of the hash δ (see
+    :func:`distinct_rows_hashed`).
+
+    The order-preserving partition buckets rows by the hash's *top* bits
+    and keeps original order inside each bucket, so per-bucket stable
+    sorts on (hash, position) concatenate to exactly the global stable
+    hash order — the flattened buckets feed the same neighbor-flag pass
+    as the sorted layout and yield a bit-identical δ.
+
+    Two extra fallback triggers relative to the sorted layout:
+
+    * bucket **overflow** (adversarially skewed hashes) would drop rows —
+      re-run through the sorted layout (identical output, just slower);
+    * a valid row whose *content* is all PAD_ID can sit right after a
+      bucket's padding tail and be merged into it by the neighbor compare
+      (the sorted layout can't hit this: stable sort keeps valid rows
+      ahead of same-key pads). Detected as a suppressed keep with an
+      invalid predecessor and routed through the fallback too.
+    """
+    capacity, k = data.shape
+    nb = RADIX_DEDUP_BUCKETS
+    cb = _radix_dedup_cap(capacity, nb)
+    buckets, counts, overflow = radix_partition(
+        data, count, n_buckets=nb, cap_bucket=cb, order_preserving=True,
+        use_pallas=use_pallas)
+
+    flat = buckets.reshape(nb * cb, k)
+    h = rowhash(flat, use_pallas=use_pallas).reshape(nb, cb)
+    pos = jnp.arange(cb, dtype=jnp.int32)[None, :]
+    valid2d = pos < counts[:, None]
+    h = jnp.where(valid2d, h, jnp.uint32(_UINT32_MAX))  # pads sort last
+    _, perm = lax.sort((h, jnp.broadcast_to(pos, (nb, cb))),
+                       dimension=1, num_keys=1)
+    rows = jnp.take_along_axis(buckets, perm[..., None], axis=1
+                               ).reshape(nb * cb, k)
+    # valid rows occupy each bucket's head before AND after the sort
+    # (stable; within-bucket pads start at counts[b] and sort behind any
+    # valid row even on a max-hash tie), so the mask needs no permuting
+    valid_s = valid2d.reshape(nb * cb)
+
+    _, keep_raw, coll_raw = hash_neighbor_flags(rows, use_pallas=use_pallas)
+    keep_raw = keep_raw.astype(bool)
+    coll_raw = coll_raw.astype(bool)
+    prev_valid = jnp.roll(valid_s, 1).at[0].set(False)
+    collision = jnp.any(coll_raw & valid_s & prev_valid)
+    pad_merge = jnp.any(~keep_raw & valid_s & ~prev_valid)
+    keep = keep_raw & valid_s
+
+    def _fallback() -> Tuple[jax.Array, jax.Array]:
+        return _distinct_hashed_sorted(data, count, use_pallas=use_pallas)
+
+    def _take() -> Tuple[jax.Array, jax.Array]:
+        out, n = compact(rows, keep)
+        # δ output fits the input capacity (n <= count <= capacity) and
+        # compact fronts the kept rows, so the slack tail is all-PAD
+        return out[:capacity], n
+
+    return lax.cond(overflow | collision | pad_merge, _fallback, _take)
 
 
 def dedup_rows(data: jax.Array, count: jax.Array,
