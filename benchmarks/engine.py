@@ -14,7 +14,7 @@ amortization literal:
                 within-bucket appends re-execute the cached closure with
                 zero re-trace (triples/sec + recompile counts reported).
 
-Four hard correctness gates run in every invocation (including
+Hard correctness gates run in every invocation (including
 ``--smoke``): an out-of-capacity extension (16× the seed) must produce the
 bit-exact KG of a fresh run over the accumulated sources with exactly one
 recompile; the distributed shard_map δ path must reuse the session's
@@ -26,7 +26,9 @@ bit-identical KG of the single-device planned path; and a fresh process
 against a populated persistent plan store
 (``config="warm_process_cold_start"``, see ``docs/plan_store.md``) must
 reach its first KG ≥ 10× faster than the cold process that populated it,
-bit-identically.
+bit-identically. The static verification layer (``docs/analysis.md``)
+is gated too: ``config="verifier_overhead"`` asserts ``verify="plan"``
+adds <5% to cold plan-build time, so the default stays on.
 
 Run: ``PYTHONPATH=src python -m benchmarks.engine [--smoke]``
 Artifacts: ``experiments/bench/engine.json``.
@@ -279,6 +281,69 @@ def check_warm_process_cold_start(n_rows: int) -> Dict[str, object]:
             "bitwise_equal": True}
 
 
+def check_verifier_overhead(n_rows: int, engine: str, dedup: str,
+                            repeats: int) -> Dict[str, object]:
+    """Acceptance gate for the static verification layer (the reason
+    ``verify="plan"`` can stay the default): the IR verifier + rewrite
+    soundness gates add <5% to cold plan-build time, best-of-N with an
+    absolute noise floor — a millisecond-scale verifier rides on a
+    seconds-scale trace+compile. ``verify="full"`` (jaxpr audit on top)
+    is recorded for the artifact but not gated."""
+    mk = lambda: make_group_b_dis(n_rows, 0.6, seed=0)  # noqa: E731
+
+    def cold(verify: str) -> float:
+        best = float("inf")
+        for _ in range(max(2, repeats)):
+            clear_plan_cache()
+            t0 = time.perf_counter()
+            session = KGEngine(mk(), engine=engine, dedup=dedup,
+                               verify=verify)
+            kg, _ = session.create_kg()
+            kg.data.block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        st = session.stats()["verify"]
+        assert st["mode"] == verify and \
+            st["plan_checks"] == (0 if verify == "off" else 1), st
+        return best
+
+    off_s = cold("off")
+    plan_s = cold("plan")
+    full_s = cold("full")
+    overhead = plan_s - off_s
+
+    # direct measurement of the verifier pass itself (the A/B delta above
+    # is dominated by compile jitter; this is the actual added work)
+    from repro.analysis import verify_plan
+    from repro.plan.annotate import annotate
+    session = KGEngine(mk(), engine=engine, dedup=dedup, verify="off")
+    session.create_kg()
+    counts, caps = annotate(session._plan, mode=session.mode,
+                            slack=session.slack)
+    direct_s = timeit(
+        lambda: verify_plan(session._plan, engine, counts=counts, caps=caps,
+                            sources=session.sources,
+                            slack=session.slack).raise_for_status(),
+        repeats=max(3, repeats), inner=5)
+    # the gate keys on the direct measure: back-to-back cold compiles of
+    # the same plan jitter by O(100ms) on shared runners — far above the
+    # millisecond-scale verifier — so the A/B delta is recorded in the
+    # artifact but cannot be gated tightly
+    assert direct_s <= 0.05 * off_s + 0.05, \
+        (f"verify='plan' pass costs {direct_s:.3f}s against a "
+         f"{off_s:.3f}s cold build (>5% + 50ms noise floor) — the "
+         "default must stay cheap")
+    return {"config": "verifier_overhead", "rows": 2 * n_rows,
+            "engine": engine, "dedup": dedup,
+            "cold_off_s": round(off_s, 5),
+            "cold_plan_s": round(plan_s, 5),
+            "cold_full_s": round(full_s, 5),
+            "verify_plan_overhead_s": round(overhead, 5),
+            "verify_plan_overhead_pct": round(100 * overhead
+                                              / max(off_s, 1e-9), 2),
+            "verify_full_overhead_s": round(full_s - off_s, 5),
+            "verify_pass_s": round(direct_s, 5)}
+
+
 def _join_heavy_dis(n_child: int, n_parent: int, seed: int = 0):
     """A join-heavy config with a LARGE parent relative to the child —
     the regime where the all_gather ⋈ exchange hits the ICI wall and
@@ -402,6 +467,7 @@ def run(scale: float = 1.0, engine: str = "sdm", dedup: str = "hash",
         check_fused_mesh_device_resident(max(16, n // 4), engine, dedup,
                                          repeats),
         check_warm_process_cold_start(max(16, n // 4)),
+        check_verifier_overhead(max(16, n // 4), engine, dedup, repeats),
     ]
     rows.extend(check_join_exchange_crossover(n, engine, dedup, repeats))
     rows.append({"config": "plan_cache", **plan_cache_stats()})

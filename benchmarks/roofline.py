@@ -10,7 +10,6 @@ a hint and exits cleanly.
 """
 from __future__ import annotations
 
-import argparse
 import glob
 import json
 import os

@@ -1,0 +1,25 @@
+"""Static plan verification: the compile-time complement of the
+differential test harness. Three passes (see ``docs/analysis.md``):
+
+1. :func:`verify_plan` — schema-typed IR checking over the plan DAG;
+2. :func:`soundness_gate` / :func:`checked_optimize` — per-rewrite
+   lossless-precondition gates over the optimizer fixpoint;
+3. :func:`audit_closure` — jaxpr collective/transfer/dtype audit of the
+   lowered closure, cross-checked against the annotated exchange plan.
+
+``python -m repro.analysis`` exposes the passes as a CLI over a DIS JSON
+spec, the built-in demo DIS, or a persistent plan store.
+"""
+from .audit import (AuditReport, ClosureAuditError, audit_closure,
+                    expected_collectives)
+from .soundness import (CONTRACTS, RewriteSoundnessError, checked_optimize,
+                        soundness_gate)
+from .verify import (Diagnostic, NodeSchema, PlanVerificationError,
+                     VerifyReport, verify_plan)
+
+__all__ = [
+    "AuditReport", "ClosureAuditError", "audit_closure",
+    "expected_collectives", "CONTRACTS", "RewriteSoundnessError",
+    "checked_optimize", "soundness_gate", "Diagnostic", "NodeSchema",
+    "PlanVerificationError", "VerifyReport", "verify_plan",
+]

@@ -1,0 +1,140 @@
+"""``python -m repro.analysis`` — run the static passes from the shell.
+
+Subcommands::
+
+    python -m repro.analysis dis spec.json [--engine E] [--audit] [-v]
+    python -m repro.analysis demo [--join] [--engine E] [--audit] [-v]
+    python -m repro.analysis store [--root PATH]
+
+``dis`` loads a DIS JSON spec (:func:`repro.core.rml.load_dis`), plans it
+through the soundness-gated optimizer, verifies the optimized plan
+against its exact annotations and prints the annotated dump with the
+verdict; ``--audit`` additionally lowers the single-device closure and
+audits its jaxpr. ``demo`` does the same on a built-in synthetic DIS
+(``--join`` picks the two-map join spec). ``store`` integrity- and
+shape-checks every entry of a persistent plan store without adopting any
+executable. Exit status is non-zero iff any check failed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _check_dis(dis, engine: str, audit: bool, verbose: bool) -> int:
+    from repro.core.rdfizer import RDFizer
+    from repro.plan.annotate import annotate
+    from repro.plan.explain import dump_plan
+    from repro.plan.lower import lower
+
+    from .audit import audit_closure
+    from .soundness import RewriteSoundnessError, checked_optimize
+    from .verify import verify_plan
+
+    plan = lower(dis)
+    try:
+        checked_optimize(plan)
+    except RewriteSoundnessError as e:
+        print(e)
+        return 1
+    counts, caps = annotate(plan, mode="exact", sources=dis.sources)
+    report = verify_plan(plan, engine, counts=counts, caps=caps)
+    if verbose:
+        print(dump_plan(plan, engine, counts=counts, caps=caps,
+                        schemas=report.schemas, verdict=report.describe()))
+    else:
+        print(report.describe())
+    status = 0 if report.ok else 1
+    if audit and report.ok:
+        from repro.plan.compile import abstract_sources, compile_plan
+        emitter = RDFizer(dis, engine, join_caps={},
+                          dedup="hash" if engine == "sdm" else None)
+        fn = compile_plan(plan, emitter, engine=engine, caps=caps)
+        audit_report = audit_closure(fn, (abstract_sources(dis.sources),),
+                                     plan=plan, engine=engine,
+                                     single_device=True)
+        print(audit_report.describe())
+        status = status or (0 if audit_report.ok else 1)
+    return status
+
+
+def _check_store(root) -> int:
+    import os
+
+    from repro.api.store import (PlanStore, default_store_root,
+                                 read_container)
+    store = PlanStore(root or default_store_root())
+    required = ("node_count", "engine", "mode", "counts", "caps",
+                "build_seconds")
+    bad = 0
+    entries = sorted(store._entry_files())
+    for path in entries:
+        name = os.path.basename(path)
+        try:
+            header, payloads = read_container(path)
+            meta = header.get("meta", {})
+            missing = [k for k in required if k not in meta]
+            if missing:
+                raise ValueError(f"meta missing keys {missing}")
+            for field in ("counts", "caps"):
+                pairs = meta[field]
+                idxs = [i for i, _ in pairs]
+                if any(i >= int(meta["node_count"]) or i < 0 for i in idxs):
+                    raise ValueError(
+                        f"{field} node index out of range "
+                        f"(node_count={meta['node_count']})")
+                if len(set(idxs)) != len(idxs):
+                    raise ValueError(f"duplicate node index in {field}")
+                if any(int(v) < 0 for _, v in pairs):
+                    raise ValueError(f"negative value in {field}")
+            if not payloads:
+                raise ValueError("entry has no executable payloads")
+            print(f"{name}  ok  ({len(payloads)} payload(s), "
+                  f"{int(meta['node_count'])} nodes)")
+        except Exception as e:
+            bad += 1
+            print(f"{name}  INVALID ({e})")
+    print(f"{len(entries)} entr{'y' if len(entries) == 1 else 'ies'}, "
+          f"{bad} invalid")
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("dis", help="verify a DIS JSON spec end to end")
+    p.add_argument("spec", help="path to the DIS JSON file")
+    p.add_argument("--engine", choices=("rmlmapper", "sdm"),
+                   default="rmlmapper")
+    p.add_argument("--audit", action="store_true",
+                   help="also audit the lowered closure's jaxpr")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="print the fully annotated plan dump")
+
+    p = sub.add_parser("demo", help="verify a built-in synthetic DIS")
+    p.add_argument("--join", action="store_true",
+                   help="use the two-map join spec instead of group B")
+    p.add_argument("--engine", choices=("rmlmapper", "sdm"),
+                   default="rmlmapper")
+    p.add_argument("--audit", action="store_true")
+    p.add_argument("-v", "--verbose", action="store_true")
+
+    p = sub.add_parser("store", help="integrity-check a plan store")
+    p.add_argument("--root", default=None)
+
+    args = ap.parse_args(argv)
+    if args.cmd == "store":
+        return _check_store(args.root)
+    if args.cmd == "dis":
+        from repro.core.rml import load_dis
+        dis = load_dis(args.spec)
+    else:
+        from repro.data.synthetic import fig5_join_dis, make_group_b_dis
+        dis = fig5_join_dis() if args.join else \
+            make_group_b_dis(48, 0.6, seed=0)
+    return _check_dis(dis, args.engine, args.audit, args.verbose)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

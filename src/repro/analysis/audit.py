@@ -1,0 +1,242 @@
+"""Pass 3 — the jaxpr auditor (``audit_closure``).
+
+Inspect a lowered closure's jaxpr *without executing it* and assert the
+device-residency invariants the runtime ``forbid_transfers`` ledger can
+only observe dynamically:
+
+* **zero host callbacks / transfers** — no ``*_callback``, ``infeed`` /
+  ``outfeed``, or ``device_put`` equation anywhere in the (recursively
+  walked) jaxpr;
+* **collective accounting** — the number of ``all_to_all`` /
+  ``all_gather`` equations must match what the annotated exchange plan
+  implies (:func:`expected_collectives`): a ``repartition`` ⋈ contributes
+  one key-exchange per *undeduplicated side* (each lowering to 2
+  ``all_to_all`` eqns — row payload + bucket counts), a ``gather`` ⋈ one
+  broadcast per undeduplicated parent (2 ``all_gather`` eqns), plus the
+  plan's global-δ and sink exchanges (see the table in
+  ``docs/analysis.md``). Extra collectives mean the mesh lowering
+  diverged from the plan the cost model priced; missing ones mean a
+  shard is computing on data it never received.
+* **dtype stability** — no unintended 64-bit promotion: every value in
+  the closure is int32/uint32/bool by construction, so a wide dtype
+  means an accidental x64 upcast that silently doubles exchange bytes.
+
+The auditor works on the *pre-AOT* jitted closure (``jax.make_jaxpr``
+traces through ``jit``); serialized AOT executables are covered because
+they are lowered from the very closure audited here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from repro.plan.ir import Distinct, EquiJoin, Node, iter_nodes
+from repro.plan.lower import LogicalPlan
+
+from .verify import Diagnostic
+
+#: jaxpr equation names that execute on (or round-trip through) the host
+HOST_CALLBACK_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "callback", "debug_callback",
+    "infeed", "outfeed",
+})
+#: equation names that move data between host and device mid-closure
+TRANSFER_PRIMITIVES = frozenset({"device_put", "transfer_to_host"})
+#: the collectives the mesh lowering is allowed to use
+COLLECTIVE_PRIMITIVES = ("all_gather", "all_to_all", "pmax", "psum",
+                        "ppermute")
+
+#: eqn fan-out per exchange site: one key-repartition lowers to 2
+#: ``all_to_all`` (row payload + per-bucket counts), one table gather to
+#: 2 ``all_gather`` (rows + counts) — measured, and pinned by tests
+EQNS_PER_REPARTITION = 2
+EQNS_PER_GATHER = 2
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Outcome of one ``audit_closure`` run."""
+
+    primitive_counts: Dict[str, int]
+    collectives: Dict[str, int]
+    expected: Optional[Dict[str, int]]
+    host_callbacks: Tuple[str, ...]
+    transfers: Tuple[str, ...]
+    promotions: Tuple[str, ...]
+    diagnostics: List[Diagnostic]
+
+    @property
+    def ok(self) -> bool:
+        return not self.diagnostics
+
+    def describe(self) -> str:
+        coll = ", ".join(f"{k}={v}" for k, v in
+                         sorted(self.collectives.items())) or "none"
+        head = f"audit: {'ok' if self.ok else 'FAILED'} (collectives: {coll}"
+        if self.expected is not None:
+            exp = ", ".join(f"{k}={v}" for k, v in
+                            sorted(self.expected.items()))
+            head += f"; expected: {exp}"
+        lines = [head + ")"]
+        lines += [f"  {d}" for d in self.diagnostics]
+        return "\n".join(lines)
+
+    def raise_for_status(self) -> "AuditReport":
+        if not self.ok:
+            raise ClosureAuditError(self)
+        return self
+
+
+class ClosureAuditError(ValueError):
+    """A lowered closure failed the static audit; ``.report`` has it."""
+
+    def __init__(self, report: AuditReport):
+        super().__init__(report.describe())
+        self.report = report
+
+
+def _walk_jaxpr(jaxpr, counter: Counter) -> Counter:
+    """Count every equation's primitive, recursing into sub-jaxprs held
+    in equation params (pjit/shard_map/scan/cond bodies)."""
+    for eqn in jaxpr.eqns:
+        counter[eqn.primitive.name] += 1
+        for value in eqn.params.values():
+            for x in (value if isinstance(value, (list, tuple))
+                      else (value,)):
+                inner = getattr(x, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    _walk_jaxpr(inner, counter)     # ClosedJaxpr
+                elif hasattr(x, "eqns"):
+                    _walk_jaxpr(x, counter)         # raw Jaxpr
+    return counter
+
+
+def _wide_outvars(jaxpr, out: List[str], seen: set) -> None:
+    for eqn in jaxpr.eqns:
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            dtype = getattr(aval, "dtype", None)
+            if dtype is not None and dtype.itemsize > 4:
+                key = f"{eqn.primitive.name} -> {dtype}"
+                if key not in seen:
+                    seen.add(key)
+                    out.append(key)
+        for value in eqn.params.values():
+            for x in (value if isinstance(value, (list, tuple))
+                      else (value,)):
+                inner = getattr(x, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    _wide_outvars(inner, out, seen)
+                elif hasattr(x, "eqns"):
+                    _wide_outvars(x, out, seen)
+
+
+def expected_collectives(plan: LogicalPlan, engine: str = "rmlmapper",
+                         n_shards: int = 1,
+                         exchanges: Optional[Mapping[Node, object]] = None,
+                         single_device: bool = False) -> Dict[str, int]:
+    """Collective eqn counts the annotated exchange plan implies.
+
+    Mirrors ``compile_mesh_plan``'s memoization exactly: repartition ⋈
+    sides dedupe on ``(side_node, key)``, gathers on the parent node, the
+    per-value global-δ exchanges are gated on ``n_shards > 1``, the sdm
+    sink runs one per-map rowhash exchange (``n_shards > 1``) while the
+    rmlmapper fused sink always repartitions (once, even on one shard).
+    ``single_device=True`` describes the meshless ``compile_plan`` path,
+    which must contain no collectives at all.
+    """
+    if single_device:
+        return {"all_gather": 0, "all_to_all": 0}
+    strategies = {node: getattr(x, "strategy", x)
+                  for node, x in (exchanges or {}).items()}
+    repart_sides: set = set()
+    gather_parents: set = set()
+    distincts: set = set()
+    emit_nodes = plan.emits()
+    for emit in emit_nodes:
+        for node in iter_nodes(emit):
+            if isinstance(node, EquiJoin):
+                if strategies.get(node) == "repartition":
+                    repart_sides.add((node.left, node.left_key))
+                    repart_sides.add((node.right, node.right_key))
+                else:
+                    gather_parents.add(node.right)
+            elif isinstance(node, Distinct):
+                distincts.add(node)
+    sites = len(repart_sides)
+    if n_shards > 1:
+        sites += len(distincts)
+        if engine == "sdm":
+            sites += len(emit_nodes)
+    if engine != "sdm":
+        sites += 1  # fused rowhash sink exchange, unconditional
+    return {"all_gather": EQNS_PER_GATHER * len(gather_parents),
+            "all_to_all": EQNS_PER_REPARTITION * sites}
+
+
+def audit_closure(fn, abstract_args: Sequence, *,
+                  plan: Optional[LogicalPlan] = None,
+                  engine: str = "rmlmapper", n_shards: int = 1,
+                  exchanges: Optional[Mapping[Node, object]] = None,
+                  single_device: bool = False) -> AuditReport:
+    """Trace ``fn`` over ``abstract_args`` (ShapeDtypeStructs — nothing
+    executes) and audit the jaxpr. With ``plan`` given, the observed
+    collective counts are cross-checked against
+    :func:`expected_collectives`; without it only the residency and
+    dtype invariants are asserted. Returns an :class:`AuditReport`."""
+    jaxpr = jax.make_jaxpr(fn)(*abstract_args)
+    counts = dict(_walk_jaxpr(jaxpr.jaxpr, Counter()))
+    diags: List[Diagnostic] = []
+
+    callbacks = tuple(sorted(
+        name for name in counts
+        if name in HOST_CALLBACK_PRIMITIVES or name.endswith("_callback")))
+    for name in callbacks:
+        diags.append(Diagnostic(
+            "host-callback", name,
+            f"{counts[name]} host-callback eqn(s) in the closure — the "
+            "plan must be device-resident end to end"))
+    transfers = tuple(sorted(
+        name for name in counts if name in TRANSFER_PRIMITIVES))
+    for name in transfers:
+        diags.append(Diagnostic(
+            "host-transfer", name,
+            f"{counts[name]} host/device transfer eqn(s) in the closure"))
+
+    promotions: List[str] = []
+    _wide_outvars(jaxpr.jaxpr, promotions, set())
+    for p in promotions:
+        diags.append(Diagnostic(
+            "dtype-promotion", p,
+            "64-bit value in a closure that is int32/bool by "
+            "construction — an accidental x64 promotion"))
+
+    collectives = {name: counts.get(name, 0)
+                   for name in ("all_gather", "all_to_all")}
+    expected = None
+    if plan is not None:
+        expected = expected_collectives(plan, engine, n_shards,
+                                        exchanges=exchanges,
+                                        single_device=single_device)
+        for name in sorted(set(expected) | set(collectives)):
+            want, got = expected.get(name, 0), collectives.get(name, 0)
+            if want != got:
+                diags.append(Diagnostic(
+                    "collective-mismatch", name,
+                    f"closure contains {got} {name} eqn(s) but the "
+                    f"annotated exchange plan implies {want}"))
+        if single_device:
+            stray = {k: v for k, v in counts.items()
+                     if k in COLLECTIVE_PRIMITIVES and v}
+            for name, v in sorted(stray.items()):
+                diags.append(Diagnostic(
+                    "collective-mismatch", name,
+                    f"single-device plan contains {v} {name} eqn(s) — "
+                    "it must lower collective-free"))
+    return AuditReport(primitive_counts=counts, collectives=collectives,
+                       expected=expected, host_callbacks=callbacks,
+                       transfers=transfers,
+                       promotions=tuple(promotions), diagnostics=diags)

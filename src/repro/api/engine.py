@@ -171,7 +171,7 @@ class KGEngine:
                  mode: str = "exact", slack: float = 1.0, mesh=None,
                  mesh_axis: str = "data", jit: bool = True,
                  join_exchange: str = "auto", plan_store=None,
-                 calibrate=False):
+                 calibrate=False, verify: str = "plan"):
         from repro.plan.annotate import JOIN_EXCHANGES
         if engine not in ("rmlmapper", "sdm"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -180,6 +180,19 @@ class KGEngine:
         if join_exchange not in JOIN_EXCHANGES:
             raise ValueError(f"unknown join exchange {join_exchange!r} "
                              f"(expected one of {JOIN_EXCHANGES})")
+        if verify not in ("off", "plan", "full"):
+            raise ValueError(f"unknown verify level {verify!r} "
+                             "(expected 'off', 'plan' or 'full')")
+        # static verification level: "plan" (default) gates every rewrite
+        # with its soundness contract and verifies each annotated plan
+        # before compiling (and every store-rehydrated entry before
+        # adoption); "full" additionally audits the lowered closure's
+        # jaxpr (collectives vs the exchange plan, zero host
+        # callbacks/transfers, dtype stability); "off" disables all of it
+        self.verify = verify
+        self._verify_plan_checks = 0
+        self._verify_audits = 0
+        self._verify_store_checks = 0
         self.join_exchange = join_exchange
         # measured-bandwidth cost model: ``True`` runs the session-start
         # collective microbenchmark once per mesh (memoized process-wide);
@@ -213,7 +226,8 @@ class KGEngine:
         self.sources: Dict[str, Table] = self._dis.sources
         self._tstats = TransformStats()
         t0 = time.perf_counter()
-        self._plan = (plan_mapsdi(self._dis, stats=self._tstats)
+        self._plan = (plan_mapsdi(self._dis, stats=self._tstats,
+                                  gate=self._rewrite_gate())
                       if optimize else lower(self._dis))
         # the session emitter is built here, over the rewritten maps, in
         # the same order the historical paths did — vocab growth (and so
@@ -267,21 +281,36 @@ class KGEngine:
         differ from a fresh estimate); before the first execution it
         predicts with the session's own mode/slack/bucketing and sticky
         safe-exchange state."""
-        from repro.plan.explain import dump_plan, explain as _explain
+        from repro.plan.explain import dump_plan
         if self.mesh is None:
-            return _explain(self._plan, self.engine)
-        entry = self._last.get("entry") if self._last else None
-        if entry is not None and entry.exchanges is not None:
-            return dump_plan(self._plan, self.engine, entry.counts,
-                             entry.caps, entry.exchanges)
-        counts, caps, exchanges = annotate_local(
-            self._plan, n_shards=int(self.mesh.shape[self.mesh_axis]),
-            cap_locals=self._cap_locals(self.sources), mode=self.mode,
-            slack=self.slack, cap_fn=bucket_cap, sources=self.sources,
-            join_exchange=self.join_exchange,
-            safe_exchange=self._safe_exchange,
-            calibration=self.calibration)
-        return dump_plan(self._plan, self.engine, counts, caps, exchanges)
+            counts, caps = annotate(self._plan)
+            exchanges = None
+        else:
+            entry = self._last.get("entry") if self._last else None
+            if entry is not None and entry.exchanges is not None:
+                counts, caps = entry.counts, entry.caps
+                exchanges = entry.exchanges
+            else:
+                counts, caps, exchanges = annotate_local(
+                    self._plan,
+                    n_shards=int(self.mesh.shape[self.mesh_axis]),
+                    cap_locals=self._cap_locals(self.sources),
+                    mode=self.mode, slack=self.slack, cap_fn=bucket_cap,
+                    sources=self.sources,
+                    join_exchange=self.join_exchange,
+                    safe_exchange=self._safe_exchange,
+                    calibration=self.calibration)
+        schemas = verdict = None
+        if self.verify != "off":
+            from repro.analysis.verify import verify_plan
+            report = verify_plan(
+                self._plan, self.engine, counts=counts, caps=caps,
+                sources=self.sources, shard_local=self.mesh is not None,
+                slack=self.slack, check_canonical=self.optimize,
+                check_cse=self.optimize)
+            schemas, verdict = report.schemas, report.describe()
+        return dump_plan(self._plan, self.engine, counts, caps, exchanges,
+                         schemas=schemas, verdict=verdict)
 
     def _source_sig(self, sources: Mapping[str, Table]) -> Tuple:
         return tuple(sorted(
@@ -327,13 +356,35 @@ class KGEngine:
                 self.mode, self.slack, self.jit, self._mesh_sig(sources),
                 self._source_sig(sources))
 
+    def _rewrite_gate(self):
+        """The optimizer's per-rewrite soundness hook (``None`` when
+        verification is off)."""
+        if self.verify == "off":
+            return None
+        from repro.analysis.soundness import soundness_gate
+        return soundness_gate
+
+    def _verify_built(self, counts, caps, sources,
+                      shard_local: bool) -> None:
+        """Statically verify the annotated plan before it is compiled;
+        a failure raises :class:`repro.analysis.PlanVerificationError`
+        (a malformed plan must never reach XLA, let alone a KG)."""
+        if self.verify == "off":
+            return
+        from repro.analysis.verify import verify_plan
+        verify_plan(self._plan, self.engine, counts=counts, caps=caps,
+                    sources=sources, shard_local=shard_local,
+                    slack=self.slack, check_canonical=self.optimize,
+                    check_cse=self.optimize).raise_for_status()
+        self._verify_plan_checks += 1
+
     def _replan(self) -> None:
         """Re-lower/re-optimize after a provenance change (e.g. σ-baked
         flags dropped by :meth:`ingest`); the cache key follows the new
         plan structure, so the next execution compiles fresh."""
         t0 = time.perf_counter()
-        self._plan = (plan_mapsdi(self._dis) if self.optimize
-                      else lower(self._dis))
+        self._plan = (plan_mapsdi(self._dis, gate=self._rewrite_gate())
+                      if self.optimize else lower(self._dis))
         self._ir_fp = fingerprint(self._plan.emits())
         self._scan_names_cache = None   # the new plan may scan differently
         self._plan_seconds += time.perf_counter() - t0
@@ -371,10 +422,18 @@ class KGEngine:
             if floor_caps:  # growth must be monotone or overflow ping-pongs
                 caps = {n: max(c, floor_caps.get(n, 0))
                         for n, c in caps.items()}
+            self._verify_built(counts, caps, sources, shard_local=False)
             fn = compile_plan(plan, self._emitter, engine=self.engine,
                               dedup=self.dedup, caps=caps, jit=self.jit,
                               report_overflow=True)
-            abstract = (abstract_sources(sources),) if aot else None
+            abstract = ((abstract_sources(sources),)
+                        if aot or self.verify == "full" else None)
+            if self.verify == "full":
+                from repro.analysis.audit import audit_closure
+                audit_closure(fn, abstract, plan=self._plan,
+                              engine=self.engine,
+                              single_device=True).raise_for_status()
+                self._verify_audits += 1
             entry = CachedPlan(key=key, plan=plan, emitter=self._emitter,
                                counts=counts, caps=caps, fn=fn,
                                engine=self.engine, dedup=self.dedup,
@@ -394,16 +453,23 @@ class KGEngine:
             if floor_caps:
                 caps = {n_: max(c, floor_caps.get(n_, 0))
                         for n_, c in caps.items()}
+            self._verify_built(counts, caps, sources, shard_local=True)
             fn, out_cap_local = compile_mesh_plan(
                 plan, self._emitter, self.mesh, self.mesh_axis,
                 engine=self.engine, dedup=self.dedup, caps=caps,
                 cap_locals=cap_locals, sink_slack=sink_slack,
                 pack_u16=len(self._dis.vocab) < (1 << 16), jit=self.jit,
                 exchanges=exchanges, safe_exchange=safe_exchange)
-            if aot:
+            if aot or self.verify == "full":
                 from repro.plan.mesh import mesh_abstract_inputs
                 abstract = mesh_abstract_inputs(self._plan, cap_locals, n,
                                                 self.mesh, self.mesh_axis)
+            if self.verify == "full":
+                from repro.analysis.audit import audit_closure
+                audit_closure(fn, abstract, plan=self._plan,
+                              engine=self.engine, n_shards=n,
+                              exchanges=exchanges).raise_for_status()
+                self._verify_audits += 1
             entry = CachedPlan(key=key, plan=plan, emitter=self._emitter,
                                counts=counts, caps=caps, fn=fn,
                                engine=self.engine, dedup=self.dedup,
@@ -476,6 +542,25 @@ class KGEngine:
             unpacked = unpack_entry_meta(meta, self._plan)
             if ("cap_locals" in unpacked) != (self.mesh is not None):
                 raise ValueError("mesh/single-device entry mismatch")
+            if self.verify != "off":
+                # the rehydrated node-index lists mapped onto THIS
+                # process's freshly lowered DAG must still describe a
+                # well-formed plan — a colliding or corrupted entry that
+                # slipped past the checksums rejects here, before its
+                # executable is adopted
+                from repro.analysis.verify import verify_plan
+                report = verify_plan(
+                    self._plan, self.engine, counts=unpacked["counts"],
+                    caps=unpacked["caps"], sources=sources,
+                    shard_local="cap_locals" in unpacked,
+                    slack=self.slack, check_canonical=self.optimize,
+                    check_cse=self.optimize)
+                if not report.ok:
+                    raise ValueError("stored plan metadata failed static "
+                                     "verification: "
+                                     + "; ".join(str(d) for d in
+                                                 report.diagnostics[:3]))
+                self._verify_store_checks += 1
             fn = None
             if NATIVE in res.payloads:
                 try:          # fast tier: zero-recompile executable
@@ -750,6 +835,10 @@ class KGEngine:
             "engine": self.engine, "dedup": self.dedup, "mode": self.mode,
             "slack": self.slack, "optimize": self.optimize,
             "join_exchange": self.join_exchange,
+            "verify": {"mode": self.verify,
+                       "plan_checks": self._verify_plan_checks,
+                       "audits": self._verify_audits,
+                       "store_checks": self._verify_store_checks},
             "cost_model": ("static" if self.calibration is None
                            else self.calibration.source),
             "calibration": (None if self.calibration is None else {

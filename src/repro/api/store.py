@@ -259,7 +259,7 @@ def unpack_entry_meta(meta: Mapping[str, object], plan) -> Dict[str, object]:
     }
     if "cap_locals" in meta:
         out["cap_locals"] = {str(k): int(v)
-                             for k, v in meta["cap_locals"].items()}
+                             for k, v in sorted(meta["cap_locals"].items())}
         out["out_cap_local"] = int(meta["out_cap_local"])
         out["sink_slack"] = float(meta["sink_slack"])
         out["safe_exchange"] = bool(meta["safe_exchange"])

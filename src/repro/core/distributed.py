@@ -42,7 +42,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.kernels.radix_partition import radix_partition
-from repro.kernels.rowhash import rowhash, rowhash_ref
+from repro.kernels.rowhash import rowhash
 from repro.relalg import PAD_ID, Table
 from repro.relalg.ops import compact, dedup_rows
 

@@ -22,7 +22,7 @@ per-step token budget (slow hosts get fewer rows; totals preserved).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 

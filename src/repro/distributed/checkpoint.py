@@ -32,7 +32,7 @@ import os
 import queue
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np

@@ -18,9 +18,8 @@ so it can be exercised end-to-end in tests and examples:
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 

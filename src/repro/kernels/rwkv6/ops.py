@@ -7,7 +7,7 @@ import jax
 
 from repro.kernels import pallas_interpret, resolve_use_pallas
 
-from .ref import rwkv6_chunked, rwkv6_scan_ref
+from .ref import rwkv6_chunked
 from .rwkv6 import rwkv6_pallas
 
 

@@ -31,7 +31,6 @@ import time
 import traceback
 from typing import Dict, List, Optional
 
-import jax
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config
 from repro.launch import mesh as mesh_lib

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 _ELEM_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -184,7 +184,6 @@ def collective_bytes_scaled(hlo_text: str) -> CollectiveStats:
     collective to a loop if its computation block is referenced as a
     while body with a known trip count."""
     # map computation name -> trip count (from while instrs)
-    body_re = re.compile(r"while\(.*?\).*?body=%?([\w.\-]+)", re.S)
     trip_re = re.compile(r'known_trip_count=\{n="?(\d+)"?\}')
     comp_trips: Dict[str, int] = {}
     for line in hlo_text.splitlines():

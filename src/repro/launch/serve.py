@@ -53,7 +53,6 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
 
     params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.gen_len
     prefill = jax.jit(make_prefill(cfg))
     step_fn = jax.jit(make_serve_step(cfg))
 

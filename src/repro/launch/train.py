@@ -19,13 +19,11 @@ Usage (CPU smoke)::
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config, reduced_config
 from repro.core.pipeline import mapsdi_create_kg
@@ -33,8 +31,7 @@ from repro.data.pipeline import KGTokenPipeline, linearize_kg
 from repro.data.synthetic import make_group_a_dis
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.fault import (FailureInjector, RestartPolicy,
-                                     SimulatedFailure, StragglerMonitor,
-                                     run_with_restarts)
+                                     StragglerMonitor, run_with_restarts)
 from repro.distributed.sharding import init_params, param_shardings
 from repro.launch.mesh import make_local_mesh
 from repro.models import auto_rules, get_model

@@ -12,7 +12,6 @@ the constraints are no-ops.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -13,9 +13,7 @@ sharded dim to partial reductions + one all-reduce).
 """
 from __future__ import annotations
 
-import math
 from types import ModuleType
-from typing import Optional
 
 from jax.sharding import Mesh
 

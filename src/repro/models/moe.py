@@ -15,7 +15,7 @@ The capacity-based buffer [E, C, D] bounds per-expert work; dropped tokens
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

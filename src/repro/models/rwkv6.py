@@ -18,8 +18,7 @@ from jax import lax
 from repro.distributed.sharding import ParamSpec
 from repro.kernels.rwkv6 import rwkv6 as wkv6
 from .layers import (Params, ShardCtx, constrain, embed, embed_specs,
-                     layer_norm, layer_unroll, norm_specs, stack_specs,
-                     unembed)
+                     layer_norm, layer_unroll, stack_specs, unembed)
 
 
 def _use_pallas(cfg) -> Optional[bool]:

@@ -13,14 +13,12 @@ Three entry points per the shape matrix: ``apply`` (train forward),
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.distributed.sharding import ParamSpec
 from .layers import (Params, ShardCtx, attention, attn_block_unroll,
                      attn_out, attn_qkv, attn_specs, banded_local_attention,
                      cache_update, constrain, embed, embed_specs,

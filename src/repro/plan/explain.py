@@ -52,23 +52,33 @@ def _fmt_bytes(n: int) -> str:
 def dump_plan(plan: LogicalPlan, engine: str = "rmlmapper",
               counts: Optional[Mapping[Node, int]] = None,
               caps: Optional[Mapping[Node, int]] = None,
-              exchanges: Optional[Mapping[Node, JoinExchange]] = None
-              ) -> str:
+              exchanges: Optional[Mapping[Node, JoinExchange]] = None,
+              schemas: Optional[Mapping[Node, object]] = None,
+              verdict: Optional[str] = None) -> str:
     """Text tree of the whole plan DAG with per-node annotations.
 
     ``exchanges`` (a mesh plan's per-⋈ decisions from ``annotate_local``)
     adds ``exchange=<strategy>`` plus the estimated per-device wire bytes
-    of both strategies to every ⋈ line."""
+    of both strategies to every ⋈ line. ``schemas`` (the static
+    verifier's per-node inference, ``repro.analysis.verify_plan(...)
+    .schemas``) adds a ``cols=`` bit per node; ``verdict`` (e.g.
+    ``report.describe()``) is printed as a header above the tree."""
     counts = counts or {}
     caps = caps or {}
     exchanges = exchanges or {}
+    schemas = schemas or {}
     root = plan.sink(engine)
     shared_ids: Dict[int, int] = {}
     seen_multi = _multi_referenced(root)
     lines: List[str] = []
+    if verdict:
+        lines.extend(verdict.splitlines())
 
     def annot(node: Node) -> str:
         bits = []
+        schema = schemas.get(node)
+        if schema is not None and not isinstance(node, Scan):
+            bits.append(f"cols={schema.describe()}")
         if node in counts:
             bits.append(f"rows={counts[node]}")
         if node in caps:

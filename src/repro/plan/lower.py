@@ -11,7 +11,7 @@ over semantification — join POMs become :class:`EquiJoin` nodes over the
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.core.schema import DIS, RefObjectMap, TripleMap, map_by_name
 

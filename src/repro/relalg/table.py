@@ -141,5 +141,7 @@ class Table:
         return {tuple(int(x) for x in row) for row in self.to_codes()}
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        traced = isinstance(self.count, jax.core.Tracer)
+        count = "?" if traced else int(self.count)
         return (f"Table(attrs={self.attrs}, capacity={self.capacity}, "
-                f"count={int(self.count) if not isinstance(self.count, jax.core.Tracer) else '?'})")
+                f"count={count})")

@@ -7,7 +7,7 @@ ssm/rwkv/hybrid) is owned by the family module (``cache_specs``).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +50,6 @@ def greedy_generate(cfg, params, batch: Dict[str, jax.Array], n_new: int,
     length for attention families — generation past it relies on the
     jnp-path kv_len masking, so we grow by concatenating fresh columns on
     the host side here (tiny model sizes only)."""
-    model = get_model(cfg.family)
     prefill = make_prefill(cfg, ctx)
     logits, cache = prefill(params, batch)
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)

@@ -12,7 +12,7 @@ preserved), so pjit shards it without extra annotation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

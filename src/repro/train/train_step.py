@@ -12,8 +12,7 @@ accumulation and the optimizer: see :mod:`repro.train.grad_compress` and
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

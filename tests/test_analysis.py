@@ -1,0 +1,454 @@
+"""Static plan verification layer (``repro.analysis``).
+
+Four legs:
+
+* corrupted-IR fixtures — every deliberate corruption (dropped column,
+  swapped join-key dtype, inflated capacity, re-duplicated CSE node,
+  non-canonical σ, cyclic DAG, unresolvable emit) is rejected with its
+  *named* diagnostic, while the intact optimized plan passes;
+* rewrite-soundness gates — a tampered pass result raises
+  ``RewriteSoundnessError`` naming the offending rewrite, and the gated
+  optimizer is a no-op on healthy plans (identical fingerprints);
+* jaxpr auditor — collective counts match the annotated exchange plan
+  for gather AND repartition on 1 and 8 virtual devices (subprocess leg,
+  like ``test_distributed.py``), mismatched exchange claims are flagged,
+  and the single-device closure audits collective-free;
+* engine/store integration — ``verify=`` counters in ``stats()``,
+  ``explain()`` renders the verdict, and a store entry whose rehydrated
+  annotations fail verification is rejected before adoption (fresh
+  compile, correct KG, no crash).
+
+The hypothesis property (every optimized plan for a randomized DIS
+passes ``verify_plan`` under the gated optimizer) runs when the test
+extra is installed; the deterministic fixtures above are its
+environment-independent floor.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis import (RewriteSoundnessError, audit_closure,
+                            checked_optimize, expected_collectives,
+                            soundness_gate, verify_plan)
+from repro.analysis.verify import PlanVerificationError
+from repro.api import KGEngine
+from repro.api.cache import PLAN_CACHE
+from repro.core import parse_dis
+from repro.data.synthetic import fig5_join_dis, make_group_b_dis
+from repro.plan.ir import (Distinct, Pred, Project, Scan, Select, Union,
+                           fingerprint)
+from repro.plan.lower import lower
+from repro.plan.optimize import optimize
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _optimized_fig5():
+    dis = fig5_join_dis()
+    plan = lower(dis)
+    optimize(plan)
+    return dis, plan
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    PLAN_CACHE.clear()
+    yield
+
+
+# ---------------------------------------------------------------------------
+# the intact plan passes; every corruption is rejected by name
+# ---------------------------------------------------------------------------
+
+def test_intact_plan_verifies():
+    dis, plan = _optimized_fig5()
+    from repro.plan.annotate import annotate
+    counts, caps = annotate(plan, mode="exact", sources=dis.sources)
+    for engine in ("rmlmapper", "sdm"):
+        report = verify_plan(plan, engine, counts=counts, caps=caps)
+        assert report.ok, report.describe()
+        assert report.nodes_checked > 0
+        assert plan.inputs[plan.maps[0].name] in report.schemas
+    with pytest.raises(PlanVerificationError):
+        bad = dict(caps)
+        bad[next(iter(bad))] = -1
+        verify_plan(plan, counts=counts, caps=bad).raise_for_status()
+
+
+def _first_distinct_input(plan):
+    for tm in plan.maps:
+        node = plan.inputs[tm.name]
+        if isinstance(node, Distinct) and isinstance(node.child, Project):
+            return tm.name, node
+    raise AssertionError("no canonical δ(π(..)) input in the plan")
+
+
+def test_dropped_column_rejected():
+    _, plan = _optimized_fig5()
+    name, node = _first_distinct_input(plan)
+    proj = node.child
+    src_attr, dst = proj.spec[0]
+    bad_spec = (("no_such_col", dst),) + proj.spec[1:]
+    plan.inputs[name] = Distinct(Project(proj.child, bad_spec))
+    report = verify_plan(plan, check_cse=False)
+    assert "unknown-column" in report.codes(), report.describe()
+
+
+def test_swapped_join_key_dtype_rejected():
+    dis, plan = _optimized_fig5()
+    # re-type one side's source extension: the ⋈ keys now disagree
+    sources = {
+        name: SimpleNamespace(
+            attrs=tuple(t.attrs),
+            data=np.zeros((1, len(t.attrs)),
+                          dtype=np.int64 if name == "gene" else np.int32))
+        for name, t in dis.sources.items()}
+    report = verify_plan(plan, sources=sources)
+    assert "join-key-dtype" in report.codes(), report.describe()
+    # intact dtypes pass
+    ok = {name: SimpleNamespace(attrs=tuple(t.attrs),
+                                data=np.zeros((1, len(t.attrs)), np.int32))
+          for name, t in dis.sources.items()}
+    assert verify_plan(plan, sources=ok).ok
+
+
+def test_inflated_capacity_rejected():
+    dis, plan = _optimized_fig5()
+    from repro.plan.annotate import annotate
+    counts, caps = annotate(plan, mode="exact", sources=dis.sources)
+    _, node = _first_distinct_input(plan)
+    bad_caps = dict(caps)
+    bad_caps[node] = caps[node.child] * 4 + 64   # δ cap > child's cap
+    report = verify_plan(plan, counts=counts, caps=bad_caps)
+    assert "capacity" in report.codes(), report.describe()
+    # a count that π/σ/δ could never produce is also flagged
+    bad_counts = dict(counts)
+    bad_counts[node] = counts[node.child] + 1
+    report = verify_plan(plan, counts=bad_counts, caps=caps)
+    assert "capacity" in report.codes(), report.describe()
+
+
+def test_reduplicated_cse_node_rejected():
+    _, plan = _optimized_fig5()
+    name, node = _first_distinct_input(plan)
+    proj = node.child
+    # a structurally equal but distinct clone next to the original — the
+    # un-interned form a reordered/corrupted rehydration would produce
+    clone = Project(proj.child, proj.spec)
+    assert clone == proj and clone is not proj
+    plan.inputs[name] = Distinct(Union((proj, clone)))
+    report = verify_plan(plan)
+    assert "cse-alias" in report.codes(), report.describe()
+    assert verify_plan(plan, check_cse=False).ok
+
+
+def test_non_canonical_select_rejected():
+    _, plan = _optimized_fig5()
+    name, node = _first_distinct_input(plan)
+    scan = node.child.child
+    while not isinstance(scan, Scan):
+        scan = scan.child
+    attr = scan.scan_attrs[0]
+    nested = Select(Select(scan, (Pred(attr, "notnull", 0),)),
+                    (Pred(attr, "eq", 1),))
+    plan.inputs[name] = Distinct(Project(
+        nested, tuple((a, a) for a in scan.scan_attrs)))
+    report = verify_plan(plan, check_cse=False)
+    assert "non-canonical" in report.codes(), report.describe()
+
+
+def test_union_arity_mismatch_rejected():
+    _, plan = _optimized_fig5()
+    name, node = _first_distinct_input(plan)
+    proj = node.child
+    narrower = Project(proj.child, proj.spec[:1])
+    plan.inputs[name] = Distinct(Union((proj, narrower)))
+    report = verify_plan(plan, check_cse=False)
+    assert "union-arity" in report.codes(), report.describe()
+
+
+def test_cycle_rejected():
+    _, plan = _optimized_fig5()
+    name, node = _first_distinct_input(plan)
+    object.__setattr__(node.child, "child", node)   # δ → π → δ cycle
+    report = verify_plan(plan, check_cse=False)
+    assert report.codes() == ("cycle",), report.describe()
+
+
+def test_empty_emit_rejected():
+    dis = fig5_join_dis()
+    tm = dis.maps[1]
+    dis.maps[1] = dataclasses.replace(tm, subject_class=None, poms=())
+    plan = lower(dis)
+    report = verify_plan(plan, check_cse=False, check_canonical=False)
+    assert "emit-empty" in report.codes(), report.describe()
+
+
+def test_unknown_source_rejected():
+    dis, plan = _optimized_fig5()
+    sources = {name: t for name, t in dis.sources.items()
+               if name != "chrom"}
+    report = verify_plan(plan, sources=sources)
+    assert "unknown-source" in report.codes(), report.describe()
+
+
+# ---------------------------------------------------------------------------
+# rewrite-soundness gates
+# ---------------------------------------------------------------------------
+
+def test_checked_optimize_is_transparent():
+    dis = fig5_join_dis()
+    gated, plain = lower(dis), lower(fig5_join_dis())
+    checked_optimize(gated)
+    optimize(plain)
+    assert fingerprint(gated.emits()) == fingerprint(plain.emits())
+
+
+def test_broken_projection_pass_named():
+    plan = lower(fig5_join_dis())
+    optimize(plan)
+    before = (list(plan.maps), dict(plan.inputs))
+    name, node = _first_distinct_input(plan)
+    # simulate a buggy Rule-1 application that drops a referenced column
+    plan.inputs[name] = Distinct(Project(node.child.child,
+                                         node.child.spec[:1]))
+    with pytest.raises(RewriteSoundnessError) as exc:
+        soundness_gate("push_projections", before, plan)
+    assert exc.value.rewrite == "push_projections"
+    assert "push_projections" in str(exc.value)
+
+
+def test_broken_selection_pass_named():
+    plan = lower(fig5_join_dis())
+    optimize(plan)
+    before = (list(plan.maps), dict(plan.inputs))
+    name, node = _first_distinct_input(plan)
+    # a σ "pushdown" that renames the schema is not a filter
+    proj = node.child
+    renamed = tuple((s, d + "_x") for s, d in proj.spec)
+    plan.inputs[name] = Distinct(Project(proj.child, renamed))
+    with pytest.raises(RewriteSoundnessError) as exc:
+        soundness_gate("push_selections", before, plan)
+    assert exc.value.rewrite == "push_selections"
+
+
+def test_broken_cse_pass_named():
+    plan = lower(fig5_join_dis())
+    optimize(plan)
+    before = (list(plan.maps), dict(plan.inputs))
+    name, node = _first_distinct_input(plan)
+    plan.inputs[name] = Distinct(Distinct(node.child))  # structure changed
+    with pytest.raises(RewriteSoundnessError) as exc:
+        soundness_gate("cse", before, plan)
+    assert exc.value.rewrite == "cse"
+
+
+# ---------------------------------------------------------------------------
+# jaxpr auditor
+# ---------------------------------------------------------------------------
+
+def test_single_device_closure_audits_clean():
+    dis, plan = _optimized_fig5()
+    from repro.core.rdfizer import RDFizer
+    from repro.plan.annotate import annotate
+    from repro.plan.compile import abstract_sources, compile_plan
+    counts, caps = annotate(plan, mode="exact", sources=dis.sources)
+    emitter = RDFizer(dis, "rmlmapper", join_caps={}, dedup=None)
+    fn = compile_plan(plan, emitter, engine="rmlmapper", caps=caps)
+    report = audit_closure(fn, (abstract_sources(dis.sources),),
+                           plan=plan, engine="rmlmapper",
+                           single_device=True)
+    assert report.ok, report.describe()
+    assert report.collectives == {"all_gather": 0, "all_to_all": 0}
+    assert not report.host_callbacks and not report.transfers
+
+
+def test_expected_collectives_model():
+    _, plan = _optimized_fig5()
+    # meshless plan: no collectives at all
+    assert expected_collectives(plan, single_device=True) == \
+        {"all_gather": 0, "all_to_all": 0}
+    # gather: one undeduplicated parent, 2 all_gather eqns
+    exp = expected_collectives(plan, "rmlmapper", n_shards=8)
+    assert exp["all_gather"] == 2
+    # forcing repartition prices both ⋈ sides instead
+    joins = [n for e in plan.emits() for _, n in e.joins]
+    exch = {j: "repartition" for j in joins}
+    exp_r = expected_collectives(plan, "rmlmapper", n_shards=8,
+                                 exchanges=exch)
+    assert exp_r["all_gather"] == 0
+    assert exp_r["all_to_all"] == exp["all_to_all"] + 4
+
+
+def test_collective_counts_match_plan_multi_device():
+    """1 and 8 virtual devices × gather/repartition × rmlmapper/sdm: the
+    lowered closure's collective eqn counts equal the exchange plan's
+    prediction, and a deliberately mislabeled exchange plan is flagged
+    as a collective mismatch."""
+    code = """
+import jax
+from repro.analysis import audit_closure
+from repro.core.rdfizer import RDFizer
+from repro.data.synthetic import fig5_join_dis
+from repro.launch.mesh import make_mesh
+from repro.plan.annotate import annotate_local
+from repro.plan.lower import lower
+from repro.plan.mesh import compile_mesh_plan, mesh_abstract_inputs
+from repro.plan.optimize import optimize
+
+dis = fig5_join_dis()
+plan = lower(dis); optimize(plan)
+cap_locals = {k: v.capacity for k, v in dis.sources.items()}
+for n in (1, 8):
+    mesh = make_mesh((n,), ("data",))
+    for engine in ("rmlmapper", "sdm"):
+        emitter = RDFizer(dis, engine, join_caps={},
+                          dedup="hash" if engine == "sdm" else None)
+        for strat in ("gather", "repartition"):
+            counts, caps, exchanges = annotate_local(
+                plan, n, cap_locals, mode="exact", sources=dis.sources,
+                join_exchange=strat)
+            fn, _ = compile_mesh_plan(
+                plan, emitter, mesh, "data", engine=engine,
+                dedup="hash" if engine == "sdm" else None, caps=caps,
+                cap_locals=cap_locals, exchanges=exchanges)
+            abstract = mesh_abstract_inputs(plan, cap_locals, n, mesh,
+                                            "data")
+            rep = audit_closure(fn, abstract, plan=plan, engine=engine,
+                                n_shards=n, exchanges=exchanges)
+            assert rep.ok, (n, engine, strat, rep.describe())
+            assert rep.expected == rep.collectives
+            if strat == "repartition" and n == 8:
+                assert rep.collectives["all_to_all"] > 0
+                # mislabeling the joins as gather must be flagged
+                joins = [j for e in plan.emits() for _, j in e.joins]
+                lied = audit_closure(fn, abstract, plan=plan,
+                                     engine=engine, n_shards=n,
+                                     exchanges={j: "gather"
+                                                for j in joins})
+                assert not lied.ok
+                assert any(d.code == "collective-mismatch"
+                           for d in lied.diagnostics)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, \
+        f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# engine + store integration
+# ---------------------------------------------------------------------------
+
+def test_engine_verify_counters_and_explain():
+    eng = KGEngine(fig5_join_dis(), engine="rmlmapper", verify="full")
+    kg, stats = eng.create_kg()
+    v = eng.stats()["verify"]
+    assert v == {"mode": "full", "plan_checks": 1, "audits": 1,
+                 "store_checks": 0}
+    text = eng.explain()
+    assert "verify: ok" in text and "cols=" in text
+    off = KGEngine(fig5_join_dis(), verify="off")
+    assert off.stats()["verify"]["mode"] == "off"
+    assert "verify:" not in off.explain()
+    with pytest.raises(ValueError):
+        KGEngine(fig5_join_dis(), verify="sometimes")
+
+
+def test_unoptimized_plan_verifies_without_cse_checks():
+    eng = KGEngine(fig5_join_dis(), optimize=False, verify="plan")
+    kg, stats = eng.create_kg()   # duplicate equal Scans are legitimate
+    assert eng.stats()["verify"]["plan_checks"] == 1
+
+
+def test_store_rehydration_verified_before_adoption(tmp_path):
+    root = str(tmp_path / "store")
+    dis = make_group_b_dis(48, 0.6, seed=0)
+    e1 = KGEngine(dis.copy(), engine="sdm", dedup="hash", plan_store=root)
+    kg1, _ = e1.create_kg()
+    # clean reload in a "fresh process": hit + verified before adoption
+    PLAN_CACHE.clear()
+    e2 = KGEngine(make_group_b_dis(48, 0.6, seed=0), engine="sdm",
+                  dedup="hash", plan_store=root)
+    kg2, _ = e2.create_kg()
+    assert e2.stats()["store_hits"] == 1
+    assert e2.stats()["verify"]["store_checks"] == 1
+    assert np.array_equal(kg1.to_codes(), kg2.to_codes())
+    # corrupt the stored annotations: the entry must reject (degrade to a
+    # fresh compile), never adopt the executable or crash
+    from repro.api.store import read_container, write_container
+    entry_files = [f for f in os.listdir(root) if f.endswith(".plan")]
+    assert entry_files
+    path = os.path.join(root, entry_files[0])
+    header, payloads = read_container(path)
+    header["meta"]["caps"] = [[i, -5] for i, _ in header["meta"]["caps"]]
+    header.pop("payloads")
+    write_container(path, header, payloads)
+    PLAN_CACHE.clear()
+    e3 = KGEngine(make_group_b_dis(48, 0.6, seed=0), engine="sdm",
+                  dedup="hash", plan_store=root)
+    kg3, _ = e3.create_kg()
+    assert e3.stats()["store_rejects"] == 1
+    assert e3.stats()["verify"]["store_checks"] == 0
+    assert np.array_equal(kg1.to_codes(), kg3.to_codes())
+    # verify=off skips the meta check (envelope checks still apply)
+    PLAN_CACHE.clear()
+    e4 = KGEngine(make_group_b_dis(48, 0.6, seed=0), engine="sdm",
+                  dedup="hash", plan_store=root, verify="off")
+    kg4, _ = e4.create_kg()
+    assert np.array_equal(kg1.to_codes(), kg4.to_codes())
+
+
+def test_cli_demo_and_store(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "demo", "--join",
+         "--audit", "-v"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "verify: ok" in out.stdout and "audit: ok" in out.stdout
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "store", "--root",
+         str(tmp_path / "empty")],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: randomized optimized plans always verify
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from test_planner_properties import dis_strategy
+
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(spec=dis_strategy())
+    def test_optimized_random_plans_verify(spec):
+        from repro.plan.annotate import annotate
+        dis = parse_dis(spec)
+        plan = lower(dis)
+        checked_optimize(plan)    # gates raise on any unsound rewrite
+        counts, caps = annotate(plan, mode="exact", sources=dis.sources)
+        for engine in ("rmlmapper", "sdm"):
+            report = verify_plan(plan, engine, counts=counts, caps=caps)
+            assert report.ok, report.describe()

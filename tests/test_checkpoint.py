@@ -1,7 +1,5 @@
 """Checkpointing + fault-tolerance behaviour tests."""
 import os
-import threading
-import time
 
 import jax
 import jax.numpy as jnp

@@ -2,10 +2,9 @@
 import numpy as np
 import pytest
 
-from repro.core import (apply_mapsdi, apply_merge, apply_projection,
-                        mapsdi_create_kg, merge_groups, parse_dis, rdfize,
-                        referenced_attrs, t_framework_create_kg,
-                        triples_to_ntriples)
+from repro.core import (apply_mapsdi, apply_projection, mapsdi_create_kg,
+                        merge_groups, parse_dis, rdfize, referenced_attrs,
+                        t_framework_create_kg, triples_to_ntriples)
 from repro.core.rdfizer import RDFizer
 from repro.data import fig4_gene_source, fig5_join_dis, make_group_a_dis, \
     make_group_b_dis

@@ -7,10 +7,8 @@ pytest.importorskip("hypothesis", reason="test extra: pip install -r "
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pipeline import mapsdi_create_kg
-from repro.data.pipeline import (BOT, EOT, KGTokenPipeline, N_SPECIAL, PAD,
-                                 SEP, linearize_kg, random_lm_batch)
+from repro.data.pipeline import BOT, EOT, KGTokenPipeline, N_SPECIAL, linearize_kg, random_lm_batch
 from repro.data.synthetic import make_group_a_dis
-from repro.relalg import Table
 
 
 def _stream(n=5000, seed=0):

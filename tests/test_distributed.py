@@ -9,7 +9,6 @@ import subprocess
 import sys
 
 import numpy as np
-import jax
 import pytest
 
 from repro.launch.mesh import make_mesh

@@ -241,7 +241,7 @@ def test_ingest_unknown_source_raises_without_mutating():
 def test_bound_annotation_reads_no_data():
     from repro.core.transform import plan_mapsdi
     from repro.plan.annotate import annotate
-    from repro.plan.ir import Scan, iter_nodes
+    from repro.plan.ir import Scan
     dis = make_group_b_dis(64, 0.5, seed=11)
     plan = plan_mapsdi(dis)
     with forbid_transfers():        # bound mode: zero device->host syncs

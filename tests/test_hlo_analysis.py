@@ -1,9 +1,7 @@
 """Unit tests for the HLO collective parser + roofline helpers."""
-import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import (CollectiveStats, collective_bytes,
-                                       collective_bytes_scaled, _type_bytes)
+from repro.launch.hlo_analysis import collective_bytes, _type_bytes
 
 
 FAKE = """

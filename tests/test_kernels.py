@@ -1,6 +1,5 @@
 """Per-kernel correctness sweeps: Pallas (interpret=True on CPU) vs the
 pure-jnp oracle, across shapes and dtypes."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -4,7 +4,6 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -6,7 +6,6 @@ over randomly generated data integration systems — random sources, random
 triple maps (references / templates / constants / classes), random join
 conditions, random duplication patterns.
 """
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="test extra: pip install -r "

@@ -23,10 +23,8 @@ import threading
 import numpy as np
 import pytest
 
-from repro.api import (KGEngine, PlanStore, clear_plan_cache, resolve_store,
-                       store_envelope, store_key)
-from repro.api.store import (FORMAT_VERSION, MAGIC, NATIVE, STABLEHLO,
-                             read_container, write_container)
+from repro.api import KGEngine, PlanStore, clear_plan_cache, resolve_store, store_envelope
+from repro.api.store import FORMAT_VERSION, NATIVE, STABLEHLO, read_container, write_container
 from repro.core import parse_dis
 from repro.core.rdfizer import RDFizer
 

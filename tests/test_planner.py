@@ -11,8 +11,7 @@ import pytest
 from repro.core import (apply_mapsdi, apply_mapsdi_eager, parse_dis, rdfize)
 from repro.core.pipeline import make_planned_fn, mapsdi_create_kg
 from repro.core.transform import _dis_signature, plan_mapsdi
-from repro.plan import (Distinct, Scan, Select, annotate, dump_plan, explain,
-                        iter_nodes, lower, optimize)
+from repro.plan import Scan, Select, annotate, dump_plan, explain, iter_nodes, lower, optimize
 from repro.relalg import forbid_transfers
 
 

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Repo-specific invariant linter (run by the CI lint job).
+
+Two families of checks, both purely static (no repro import needed):
+
+1. **Process-stability of fingerprints and cache keys.** The plan cache,
+   the persistent plan store and the IR fingerprint must produce the
+   same bytes in every process, so the modules computing them may not
+   use process-unstable constructs:
+
+   * ``id(..)`` — CPython object addresses differ per process;
+   * builtin ``hash(..)`` — salted per process for str/bytes
+     (PYTHONHASHSEED);
+   * unsorted ``dict.items()/.keys()/.values()`` iteration inside
+     key/fingerprint/signature functions — insertion order is
+     deterministic per process but NOT across processes that built the
+     dict differently; every such iteration must go through
+     ``sorted(..)``.
+
+   Functions that legitimately need object identity (e.g. instance
+   counting under structural equality) carry an explicit
+   ``# lint: allow-id`` pragma on the offending line.
+
+2. **Kernel package convention.** Every ``kernels/<name>/`` package
+   ships the rowhash-convention triple — ``ref.py`` (the pure-jnp
+   oracle), ``<name>.py`` (the Pallas kernel) and ``ops.py`` (the
+   dispatcher), with the dispatcher routing through the shared
+   ``resolve_use_pallas`` so ``REPRO_USE_PALLAS``/interpret-mode
+   behavior stays uniform across kernels.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import List
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src", "repro")
+
+#: modules whose outputs must be bit-stable across processes
+FINGERPRINT_MODULES = (
+    os.path.join(SRC, "plan", "ir.py"),
+    os.path.join(SRC, "api", "store.py"),
+    os.path.join(SRC, "api", "cache.py"),
+    os.path.join(SRC, "api", "engine.py"),
+)
+
+#: function-name fragments that mark key/fingerprint computations
+KEY_FUNCTION_MARKERS = ("fingerprint", "signature", "canonical", "_key",
+                        "key(", "envelope", "pack_entry_meta", "_sig")
+
+ALLOW_PRAGMA = "lint: allow-id"
+
+
+def _is_key_function(name: str) -> bool:
+    return any(m.rstrip("(") in name for m in KEY_FUNCTION_MARKERS)
+
+
+class _StabilityVisitor(ast.NodeVisitor):
+    def __init__(self, path: str, lines: List[str]):
+        self.path = path
+        self.lines = lines
+        self.errors: List[str] = []
+        self._func_stack: List[str] = []
+        self._sorted_depth = 0
+
+    def _allowed(self, node: ast.AST) -> bool:
+        line = self.lines[node.lineno - 1]
+        return ALLOW_PRAGMA in line
+
+    def _err(self, node: ast.AST, msg: str) -> None:
+        rel = os.path.relpath(self.path, REPO)
+        self.errors.append(f"{rel}:{node.lineno}: {msg}")
+
+    def visit_FunctionDef(self, node):
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        if isinstance(func, ast.Name) and func.id in ("id", "hash"):
+            if not self._allowed(node):
+                self._err(node,
+                          f"builtin {func.id}() is process-unstable — "
+                          "fingerprint/cache-key modules must not use it "
+                          f"(add '# {ALLOW_PRAGMA}' only for non-key "
+                          "identity bookkeeping)")
+        in_key_fn = any(_is_key_function(f) for f in self._func_stack)
+        if isinstance(func, ast.Attribute) and \
+                func.attr in ("items", "keys", "values") and in_key_fn \
+                and self._sorted_depth == 0 and not self._allowed(node):
+            self._err(node,
+                      f"unsorted dict .{func.attr}() iteration inside a "
+                      "key/fingerprint function — wrap it in sorted(..)")
+        if isinstance(func, ast.Name) and func.id == "sorted":
+            self._sorted_depth += 1
+            self.generic_visit(node)
+            self._sorted_depth -= 1
+            return
+        self.generic_visit(node)
+
+
+def check_fingerprint_modules() -> List[str]:
+    errors: List[str] = []
+    for path in FINGERPRINT_MODULES:
+        with open(path) as f:
+            source = f.read()
+        visitor = _StabilityVisitor(path, source.splitlines())
+        visitor.visit(ast.parse(source, filename=path))
+        errors.extend(visitor.errors)
+    return errors
+
+
+def check_kernel_convention() -> List[str]:
+    errors: List[str] = []
+    kroot = os.path.join(SRC, "kernels")
+    for name in sorted(os.listdir(kroot)):
+        pkg = os.path.join(kroot, name)
+        if not os.path.isdir(pkg) or name.startswith("_"):
+            continue
+        rel = os.path.relpath(pkg, REPO)
+        for required in ("ref.py", "ops.py", f"{name}.py"):
+            if not os.path.exists(os.path.join(pkg, required)):
+                errors.append(
+                    f"{rel}: missing {required} — every kernel package "
+                    "ships the (ref.py oracle, kernel module, ops.py "
+                    "dispatcher) triple")
+        ops = os.path.join(pkg, "ops.py")
+        if os.path.exists(ops):
+            with open(ops) as f:
+                text = f.read()
+            if "resolve_use_pallas" not in text:
+                errors.append(
+                    f"{rel}/ops.py: dispatcher does not use the shared "
+                    "resolve_use_pallas — kernel selection must be "
+                    "uniform across packages")
+    return errors
+
+
+def main() -> int:
+    errors = check_fingerprint_modules() + check_kernel_convention()
+    for e in errors:
+        print(e)
+    print(f"lint_invariants: {len(errors)} violation(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
