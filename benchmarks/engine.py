@@ -43,7 +43,8 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from repro.api import KGEngine, clear_plan_cache, plan_cache_stats
+from repro.api import (EngineConfig, KGEngine, clear_plan_cache,
+                       plan_cache_stats)
 from repro.core import parse_dis
 from repro.core.distributed import repartition_trace_count
 from repro.core.pipeline import mapsdi_create_kg
@@ -87,7 +88,7 @@ def bench_cold_vs_cached(n_rows: int, engine: str, dedup: str,
     # steady state: re-execution of one session's cached closure (best-of-N
     # even in --smoke — the regression gate keys on this, and a single
     # measurement of a millisecond-scale call is too noisy to gate on)
-    session = KGEngine(mk(), engine=engine, dedup=dedup)
+    session = KGEngine(mk(), config=EngineConfig(engine=engine, dedup=dedup))
     session.create_kg()
     steady_s = timeit(lambda: session.run(), repeats=max(3, repeats),
                       inner=10)
@@ -114,7 +115,7 @@ def bench_cold_vs_cached(n_rows: int, engine: str, dedup: str,
 def bench_ingest(n_rows: int, engine: str, dedup: str, batches: int,
                  batch_rows: int) -> Dict[str, object]:
     session = KGEngine(make_group_b_dis(n_rows, 0.6, seed=0),
-                       engine=engine, dedup=dedup)
+                       config=EngineConfig(engine=engine, dedup=dedup))
     session.create_kg()
     # warm batch: absorbs the (at most one) bucket-crossing recompile so
     # the loop below times the cached steady state
@@ -147,7 +148,7 @@ def check_overflow_recompile(n_rows: int, engine: str, dedup: str
     is bit-exact vs a fresh run over the accumulated sources — with exactly
     one recompile."""
     dis = make_group_b_dis(n_rows, 0.6, seed=0)
-    session = KGEngine(dis, engine=engine, dedup=dedup)
+    session = KGEngine(dis, config=EngineConfig(engine=engine, dedup=dedup))
     session.create_kg()
     assert session.stats()["recompiles"] == 0
     kg, stats = session.ingest(
@@ -171,8 +172,8 @@ def check_distributed_closure_reuse(n_rows: int, dedup: str
     collective closure — the shard body is traced at most once across
     repeated ingests (trace-count guard)."""
     mesh = make_mesh((1,), ("data",))
-    session = KGEngine(make_group_b_dis(n_rows, 0.6, seed=0), mesh=mesh,
-                       dedup=dedup)
+    session = KGEngine(make_group_b_dis(n_rows, 0.6, seed=0),
+                       config=EngineConfig(mesh=mesh, dedup=dedup))
     session.create_kg()
     t0 = repartition_trace_count()
     for b in range(2):
@@ -199,8 +200,10 @@ def check_fused_mesh_device_resident(n_rows: int, engine: str, dedup: str,
     n_dev = jax.device_count()
     mesh = make_mesh((n_dev,), ("data",))
     mk = lambda: make_group_b_dis(n_rows, 0.6, seed=0)  # noqa: E731
-    kg_single, _ = KGEngine(mk(), engine=engine, dedup=dedup).create_kg()
-    session = KGEngine(mk(), engine=engine, dedup=dedup, mesh=mesh)
+    kg_single, _ = KGEngine(mk(), config=EngineConfig(
+        engine=engine, dedup=dedup)).create_kg()
+    session = KGEngine(mk(), config=EngineConfig(engine=engine, dedup=dedup,
+                                                 mesh=mesh))
     kg_mesh, stats = session.create_kg()
     assert np.array_equal(kg_mesh.to_codes(), kg_single.to_codes()), \
         "fused mesh KG differs from the single-device planned path"
@@ -222,13 +225,13 @@ def check_fused_mesh_device_resident(n_rows: int, engine: str, dedup: str,
 
 _WARM_START_CHILD = r"""
 import hashlib, json, sys, time
-from repro.api import KGEngine
+from repro.api import EngineConfig, KGEngine
 from repro.data.synthetic import make_group_b_dis
 
 root, n_rows = sys.argv[1], int(sys.argv[2])
 dis = make_group_b_dis(n_rows, 0.6, seed=0)
 t0 = time.perf_counter()          # post-import: plan + compile-or-load + run
-session = KGEngine(dis, plan_store=root)
+session = KGEngine(dis, config=EngineConfig(plan_store=root))
 kg, stats = session.create_kg()
 kg.data.block_until_ready()
 dt = time.perf_counter() - t0
@@ -296,8 +299,8 @@ def check_verifier_overhead(n_rows: int, engine: str, dedup: str,
         for _ in range(max(2, repeats)):
             clear_plan_cache()
             t0 = time.perf_counter()
-            session = KGEngine(mk(), engine=engine, dedup=dedup,
-                               verify=verify)
+            session = KGEngine(mk(), config=EngineConfig(
+                engine=engine, dedup=dedup, verify=verify))
             kg, _ = session.create_kg()
             kg.data.block_until_ready()
             best = min(best, time.perf_counter() - t0)
@@ -315,7 +318,8 @@ def check_verifier_overhead(n_rows: int, engine: str, dedup: str,
     # is dominated by compile jitter; this is the actual added work)
     from repro.analysis import verify_plan
     from repro.plan.annotate import annotate
-    session = KGEngine(mk(), engine=engine, dedup=dedup, verify="off")
+    session = KGEngine(mk(), config=EngineConfig(engine=engine, dedup=dedup,
+                                                 verify="off"))
     session.create_kg()
     counts, caps = annotate(session._plan, mode=session.mode,
                             slack=session.slack)
@@ -399,13 +403,14 @@ def check_join_exchange_crossover(n_rows: int, engine: str, dedup: str,
     # per device (~a few thousand rows per shard)
     n_child, n_parent = max(32, n_rows // 2), max(1 << 14, 8 * n_rows)
     big = lambda: _join_heavy_dis(n_child, n_parent)  # noqa: E731
-    kg_single, _ = KGEngine(big(), engine=engine, dedup=dedup).create_kg()
+    kg_single, _ = KGEngine(big(), config=EngineConfig(
+        engine=engine, dedup=dedup)).create_kg()
     rows: List[Dict] = []
     steady: Dict[str, float] = {}
     kg_by_strategy = {}
     for strategy in ("gather", "repartition"):
-        session = KGEngine(big(), engine=engine, dedup=dedup, mesh=mesh,
-                           join_exchange=strategy)
+        session = KGEngine(big(), config=EngineConfig(
+            engine=engine, dedup=dedup, mesh=mesh, join_exchange=strategy))
         kg, stats = session.create_kg()
         assert np.array_equal(kg.to_codes(), kg_single.to_codes()), \
             f"{strategy} KG differs from the single-device planned path"
@@ -431,15 +436,17 @@ def check_join_exchange_crossover(n_rows: int, engine: str, dedup: str,
     assert np.array_equal(kg_by_strategy["gather"].to_codes(),
                           kg_by_strategy["repartition"].to_codes())
 
-    auto_big = KGEngine(big(), engine=engine, dedup=dedup, mesh=mesh,
-                        join_exchange="auto")
+    auto_big = KGEngine(big(), config=EngineConfig(
+        engine=engine, dedup=dedup, mesh=mesh, join_exchange="auto"))
     auto_big.create_kg()
     big_choice = _auto_choices(auto_big)
     assert big_choice == (["repartition"] if n_dev > 1 else ["gather"]), \
         f"auto chose {big_choice} on the large-parent config ({n_dev} dev)"
     # fixed smoke-sized group-B (small parent): auto must keep gathering
-    auto_small = KGEngine(make_group_b_dis(80, 0.6, seed=0), engine=engine,
-                          dedup=dedup, mesh=mesh, join_exchange="auto")
+    auto_small = KGEngine(make_group_b_dis(80, 0.6, seed=0),
+                          config=EngineConfig(engine=engine, dedup=dedup,
+                                              mesh=mesh,
+                                              join_exchange="auto"))
     auto_small.create_kg()
     small_choice = _auto_choices(auto_small)
     assert small_choice == ["gather"], \

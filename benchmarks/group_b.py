@@ -14,7 +14,7 @@ import argparse
 import time
 from typing import Dict, List
 
-from repro.api import KGEngine
+from repro.api import EngineConfig, KGEngine
 from repro.configs.mapsdi_paper import CONFIG as PAPER
 from repro.core.tframework import make_t_framework_fn
 from repro.core.transform import apply_mapsdi
@@ -48,7 +48,7 @@ def run(scale: float = 1.0, seed: int = 0, engine: str = "sdm",
         t0 = time.perf_counter()
         dis_m2, _ = apply_mapsdi(dis_m)
         pre_s = time.perf_counter() - t0   # the one-off transform
-        fn_m = KGEngine(dis_m2, engine).run
+        fn_m = KGEngine(dis_m2, config=EngineConfig(engine=engine)).run
         fn_t = make_t_framework_fn(dis_t, engine)
         warm_m = _warm_time(fn_m)
         warm_t = _warm_time(fn_t)

@@ -30,7 +30,7 @@ from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
-from repro.api import KGEngine
+from repro.api import EngineConfig, KGEngine
 from repro.core import RDFizer, apply_mapsdi_eager, parse_dis
 from repro.core.transform import plan_mapsdi
 from repro.data.synthetic import (FIG3_MAP, fig4_gene_source,
@@ -136,7 +136,8 @@ def _bench_planned(dis, engine: str, dedup: str, repeats: int
     with forbid_transfers() as ledger:
         plan_mapsdi(dis)
     t0 = time.perf_counter()
-    session = KGEngine(dis, engine=engine, dedup=dedup)
+    session = KGEngine(dis, config=EngineConfig(engine=engine,
+                                                dedup=dedup))
     plan_s = time.perf_counter() - t0
 
     def run():

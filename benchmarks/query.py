@@ -1,0 +1,129 @@
+"""KGQuery benchmark: cold vs cached BGP latency over the resident KG.
+
+The query tier's value proposition mirrors the creation tier's: pay the
+plan+compile cost once per query *structure*, then answer every
+structurally-identical BGP (any constants in the same shape) at jitted
+steady-state rates. Cells:
+
+* ``query_cold``   — first ``engine.query(q)`` on a session: lowering +
+                     capacity annotation + static verification + jit
+                     compile + execute.
+* ``query_cached`` — the same BGP again: the query plan-cache tier returns
+                     the compiled closure, only execution remains. Gated
+                     in-bench: the repeat MUST be a cache hit with zero
+                     recompiles, and ≥ 10× faster than cold (≥ 2× on a
+                     mesh, where every call re-pays the final unshard +
+                     host-visible δ).
+* ``queries_per_s``— best-of-N steady-state rate for a 2-hop join BGP and
+                     a single-pattern scan (the regression gate keys on
+                     the join cell).
+
+Every row carries ``devices``; with >1 visible device the same cells run
+through the shard_map mesh path (cost-modeled ⋈ exchanges + sharded δ),
+so the CI multi-device leg benchmarks the collective query path.
+
+Run: ``PYTHONPATH=src python -m benchmarks.query [--smoke]``
+Artifacts: ``experiments/bench/query.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.api import (EngineConfig, KGEngine, Query, TriplePattern,
+                       clear_plan_cache)
+from repro.data.synthetic import make_group_b_dis
+from repro.relalg import host_int
+
+from .common import print_csv, save_rows, timeit
+
+
+def _queries() -> Dict[str, Query]:
+    return {
+        "scan_1pat": Query(patterns=[TriplePattern("?s", "?p", "?o")]),
+        "join_2hop": Query(patterns=[TriplePattern("?s", "?p", "?o"),
+                                     TriplePattern("?o", "?p2", "?o2")]),
+    }
+
+
+def bench_queries(n_rows: int, engine: str, dedup: str, repeats: int,
+                  mesh) -> List[Dict]:
+    n_dev = int(mesh.shape["data"]) if mesh is not None else 1
+    session = KGEngine(make_group_b_dis(n_rows, 0.6, seed=0),
+                       config=EngineConfig(engine=engine, dedup=dedup,
+                                           mesh=mesh))
+    kg, _ = session.create_kg()
+    kg_triples = int(host_int(kg.count))
+    rows: List[Dict] = []
+    for name, q in _queries().items():
+        clear_plan_cache()
+        t0 = time.perf_counter()
+        res_cold = session.query(q)
+        res_cold.data.block_until_ready()
+        cold_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        res_hit = session.query(q)
+        res_hit.data.block_until_ready()
+        cached_s = time.perf_counter() - t0
+        st = session.stats()["query"]
+        # hard gates: the repeat is a plan-cache hit, recompile-free, and
+        # answers bit-identically
+        assert st["last_cache_hit"] and st["recompiles"] == 0, st
+        assert np.array_equal(res_hit.to_codes(), res_cold.to_codes())
+        # the mesh path re-pays the final unshard + host-visible δ per
+        # call, so its cached floor is higher than the single-device one
+        factor = 10 if mesh is None else 2
+        assert cached_s * factor <= cold_s, \
+            (f"cached {name} only {cold_s / cached_s:.1f}x faster than "
+             f"cold (gate {factor}x, devices={n_dev})")
+
+        steady_s = timeit(
+            lambda: session.query(q).data.block_until_ready(),
+            repeats=max(3, repeats), inner=10)
+        answers = int(host_int(res_cold.count))
+        rows.append({
+            "config": name, "devices": n_dev, "engine": engine,
+            "dedup": dedup, "kg_triples": kg_triples, "answers": answers,
+            "cold_s": round(cold_s, 5),
+            "cached_s": round(cached_s, 5),
+            "steady_s": round(steady_s, 5),
+            "speedup_cached": round(cold_s / max(cached_s, 1e-9), 2),
+            "queries_per_s": round(1.0 / max(steady_s, 1e-9), 1),
+        })
+    return rows
+
+
+def run(scale: float = 1.0, engine: str = "sdm", dedup: str = "hash",
+        repeats: int = 3) -> List[Dict]:
+    n = max(32, int(2000 * scale))
+    rows = bench_queries(n, engine, dedup, repeats, mesh=None)
+    if jax.device_count() > 1:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((jax.device_count(),), ("data",))
+        rows += bench_queries(n, engine, dedup, repeats, mesh=mesh)
+    return rows
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny cells, correctness gates only (CI)")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--engine", default="sdm")
+    ap.add_argument("--dedup", default="hash")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+    rows = run(scale=0.02 if args.smoke else args.scale, engine=args.engine,
+               dedup=args.dedup, repeats=1 if args.smoke else args.repeats)
+    save_rows("query", rows)
+    print_csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,10 @@ METRICS: List[Tuple[str, str, str]] = [
     # the radix bucketization kernel behind every exchange/global-δ (the
     # sort-path comparison is asserted bit-identical inside the bench)
     ("partition", "partition", "radix_rows_per_s"),
+    # steady-state 2-hop BGP answering through the query plan-cache tier
+    # (docs/query.md — cold vs cached is gated ≥10× inside the bench; this
+    # catches jitted-execution-path rot)
+    ("query", "join_2hop", "queries_per_s"),
 ]
 
 

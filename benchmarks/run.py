@@ -10,6 +10,8 @@
   * partition   — local shard bucketization: sort path vs radix kernel
   * planner     — eager fixpoint vs optimizing planner (docs/planner.md)
   * engine      — KGEngine sessions: cold vs cached vs ingest (docs/engine.md)
+  * query       — KGQuery BGPs: cold vs cached latency, queries/s
+                  (docs/query.md)
   * roofline    — collated §Roofline table (from dry-run artifacts)
 
 ``--smoke`` exercises exactly one tiny cell per group (CI wiring: fast,
@@ -29,14 +31,14 @@ def main(argv=None) -> int:
                          "(1.0 = the scaled-down paper testbed)")
     ap.add_argument("--only", default="",
                     help="comma list: group_a,group_b,table1,motivating,"
-                         "dedup,partition,planner,engine,roofline")
+                         "dedup,partition,planner,engine,query,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny cell per group (CI)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from . import dedup, engine, group_a, group_b, motivating, partition, \
-        planner, roofline, table1
+        planner, query, roofline, table1
 
     if args.smoke:
         from repro.configs.mapsdi_paper import CONFIG as PAPER
@@ -62,6 +64,7 @@ def main(argv=None) -> int:
             ("partition", lambda: partition.main(["--smoke"])),
             ("planner", lambda: planner.main(["--smoke"])),
             ("engine", lambda: engine.main(["--smoke"])),
+            ("query", lambda: query.main(["--smoke"])),
             ("roofline", lambda: roofline.main([])),
         ]
     else:
@@ -76,6 +79,8 @@ def main(argv=None) -> int:
             ("planner", lambda: planner.main(
                 ["--scale", str(args.scale)])),
             ("engine", lambda: engine.main(
+                ["--scale", str(args.scale)])),
+            ("query", lambda: query.main(
                 ["--scale", str(args.scale)])),
             ("roofline", lambda: roofline.main([])),
         ]

@@ -10,7 +10,7 @@ work each framework did.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.api import KGEngine
+from repro.api import EngineConfig, KGEngine, Query, TriplePattern
 from repro.core import parse_dis
 from repro.core.rdfizer import triples_to_ntriples
 from repro.core.tframework import t_framework_create_kg
@@ -31,7 +31,7 @@ print(f"T-framework : {stats_t['raw_triples']} raw triples generated, "
       f"{stats_t['kg_triples']} after dedup")
 
 # --- MapSDI session: plan once (Rules 1-3 + σ + CSE), then ONE closure ----
-engine = KGEngine(dis)
+engine = KGEngine(dis, config=EngineConfig(engine="sdm"))
 kg_m, stats_m = engine.create_kg()
 rows_after = sum(stats_m['source_rows_after'].values())
 print(f"MapSDI      : {rows_after} source rows after Rule 1 "
@@ -50,6 +50,12 @@ kg_i, stats_i = engine.ingest(
 print(f"ingest      : +1 row -> {stats_i['kg_triples']} triples "
       f"(recompiles={stats_i['recompiles']}, "
       f"cache_hit={stats_i['plan_cache_hit']})")
+
+# --- BGP queries run on-device through the same plan machinery ------------
+answers = engine.query(Query(
+    patterns=[TriplePattern("?s", "?p", "?o")], project=("?p",)))
+print(f"query       : {int(answers.count)} distinct predicates "
+      f"(SELECT DISTINCT ?p WHERE {{ ?s ?p ?o }})")
 
 # --- inspect the optimized plan (dump_plan/explain) -----------------------
 print("\nOptimized logical plan (per-node plan-time rows/capacities):")

@@ -11,15 +11,16 @@ differential test harness. Three passes (see ``docs/analysis.md``):
 spec, the built-in demo DIS, or a persistent plan store.
 """
 from .audit import (AuditReport, ClosureAuditError, audit_closure,
-                    expected_collectives)
+                    expected_collectives, expected_query_collectives)
 from .soundness import (CONTRACTS, RewriteSoundnessError, checked_optimize,
                         soundness_gate)
 from .verify import (Diagnostic, NodeSchema, PlanVerificationError,
-                     VerifyReport, verify_plan)
+                     VerifyReport, verify_plan, verify_query_plan)
 
 __all__ = [
     "AuditReport", "ClosureAuditError", "audit_closure",
-    "expected_collectives", "CONTRACTS", "RewriteSoundnessError",
-    "checked_optimize", "soundness_gate", "Diagnostic", "NodeSchema",
-    "PlanVerificationError", "VerifyReport", "verify_plan",
+    "expected_collectives", "expected_query_collectives", "CONTRACTS",
+    "RewriteSoundnessError", "checked_optimize", "soundness_gate",
+    "Diagnostic", "NodeSchema", "PlanVerificationError", "VerifyReport",
+    "verify_plan", "verify_query_plan",
 ]

@@ -177,16 +177,58 @@ def expected_collectives(plan: LogicalPlan, engine: str = "rmlmapper",
             "all_to_all": EQNS_PER_REPARTITION * sites}
 
 
+def expected_query_collectives(plan, n_shards: int = 1,
+                               exchanges: Optional[Mapping[Node, object]]
+                               = None,
+                               single_device: bool = False
+                               ) -> Dict[str, int]:
+    """Collective eqn counts a fused query closure
+    (:func:`repro.query.mesh.compile_query_mesh`) implies — the query-DAG
+    sibling of :func:`expected_collectives`: same per-site fan-out and
+    memoization (repartition ⋈ sides dedupe on ``(side_node, key)``,
+    gathers on the parent node, every δ — including the root — is one
+    rowhash exchange when ``n_shards > 1``), no emitter/sink terms.
+    ``plan`` is duck-typed via ``emits()`` (a
+    :class:`repro.query.lower.QueryPlan`)."""
+    if single_device:
+        return {"all_gather": 0, "all_to_all": 0}
+    strategies = {node: getattr(x, "strategy", x)
+                  for node, x in (exchanges or {}).items()}
+    repart_sides: set = set()
+    gather_parents: set = set()
+    distincts: set = set()
+    for root in plan.emits():
+        for node in iter_nodes(root):
+            if isinstance(node, EquiJoin):
+                if strategies.get(node) == "repartition":
+                    repart_sides.add((node.left, node.left_key))
+                    repart_sides.add((node.right, node.right_key))
+                else:
+                    gather_parents.add(node.right)
+            elif isinstance(node, Distinct):
+                distincts.add(node)
+    sites = len(repart_sides)
+    if n_shards > 1:
+        sites += len(distincts)
+    return {"all_gather": EQNS_PER_GATHER * len(gather_parents),
+            "all_to_all": EQNS_PER_REPARTITION * sites}
+
+
 def audit_closure(fn, abstract_args: Sequence, *,
                   plan: Optional[LogicalPlan] = None,
                   engine: str = "rmlmapper", n_shards: int = 1,
                   exchanges: Optional[Mapping[Node, object]] = None,
-                  single_device: bool = False) -> AuditReport:
+                  single_device: bool = False,
+                  expected_counts: Optional[Dict[str, int]] = None
+                  ) -> AuditReport:
     """Trace ``fn`` over ``abstract_args`` (ShapeDtypeStructs — nothing
     executes) and audit the jaxpr. With ``plan`` given, the observed
     collective counts are cross-checked against
-    :func:`expected_collectives`; without it only the residency and
-    dtype invariants are asserted. Returns an :class:`AuditReport`."""
+    :func:`expected_collectives`; ``expected_counts`` supplies the
+    expectation directly instead (the query path passes
+    :func:`expected_query_collectives`); without either only the
+    residency and dtype invariants are asserted. Returns an
+    :class:`AuditReport`."""
     jaxpr = jax.make_jaxpr(fn)(*abstract_args)
     counts = dict(_walk_jaxpr(jaxpr.jaxpr, Counter()))
     diags: List[Diagnostic] = []
@@ -216,11 +258,12 @@ def audit_closure(fn, abstract_args: Sequence, *,
 
     collectives = {name: counts.get(name, 0)
                    for name in ("all_gather", "all_to_all")}
-    expected = None
-    if plan is not None:
+    expected = expected_counts
+    if expected is None and plan is not None:
         expected = expected_collectives(plan, engine, n_shards,
                                         exchanges=exchanges,
                                         single_device=single_device)
+    if expected is not None:
         for name in sorted(set(expected) | set(collectives)):
             want, got = expected.get(name, 0), collectives.get(name, 0)
             if want != got:

@@ -39,8 +39,8 @@ from typing import Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from repro.core.schema import RefObjectMap, TermMap
-from repro.plan.ir import (Distinct, EmitTriples, EquiJoin, Node, Project,
-                           Scan, Select, Union)
+from repro.plan.ir import (ColEq, Distinct, EmitTriples, EquiJoin, Node,
+                           Project, Scan, Select, Union)
 from repro.plan.lower import LogicalPlan
 
 #: dtype every Table column carries by construction
@@ -242,6 +242,24 @@ def _infer(node: Node, schemas: Dict[Node, NodeSchema],
         schemas[node] = child
         return
 
+    if isinstance(node, ColEq):
+        child = schema_of(node.child)
+        for attr in (node.left_attr, node.right_attr):
+            if attr not in child.attrs:
+                out.append(Diagnostic(
+                    "unknown-column", where,
+                    f"σ= references {attr!r} which is not in the child "
+                    f"schema [{child.describe()}]"))
+        lt = child.dtype_of(node.left_attr)
+        rt = child.dtype_of(node.right_attr)
+        if lt is not None and rt is not None and lt != rt:
+            out.append(Diagnostic(
+                "coleq-dtype", where,
+                f"σ= column dtypes differ: {node.left_attr}:{lt} vs "
+                f"{node.right_attr}:{rt}"))
+        schemas[node] = child
+        return
+
     if isinstance(node, Distinct):
         schemas[node] = schema_of(node.child)
         return
@@ -312,6 +330,12 @@ def _check_canonical(node: Node, out: List[Diagnostic]) -> None:
         if len(set(node.preds)) != len(node.preds):
             out.append(Diagnostic("non-canonical", where,
                                   "σ carries duplicate predicates"))
+    elif isinstance(node, ColEq):
+        if node.left_attr > node.right_attr:
+            out.append(Diagnostic(
+                "non-canonical", where,
+                "σ= attr pair is not in canonical sorted order — "
+                "make_coleq orders it"))
     elif isinstance(node, Distinct):
         if isinstance(node.child, Distinct):
             out.append(Diagnostic("non-canonical", where,
@@ -418,7 +442,7 @@ def _check_annotations(order: List[Node],
                                   f"negative planned capacity {cap}"))
         if cnt is not None:
             kids = [c(k) for k in node.children()]
-            if isinstance(node, (Project, Select, Distinct)) and \
+            if isinstance(node, (Project, Select, ColEq, Distinct)) and \
                     kids and kids[0] is not None and cnt > kids[0]:
                 out.append(Diagnostic(
                     "capacity", where,
@@ -448,7 +472,7 @@ def _check_annotations(order: List[Node],
                     f"capacity {cap} cannot hold the node's own planned "
                     f"count {cnt}"))
             kid_caps = [caps.get(k) for k in node.children()]
-            if isinstance(node, (Project, Select, Distinct)) and \
+            if isinstance(node, (Project, Select, ColEq, Distinct)) and \
                     kid_caps and kid_caps[0] is not None and \
                     cap > kid_caps[0]:
                 out.append(Diagnostic(
@@ -467,7 +491,7 @@ def _check_annotations(order: List[Node],
             # shard-local caps: only π/σ stay below their child (δ and ⋈
             # redistribute rows across shards; ∪ mixes clamped slices)
             kid_caps = [caps.get(k) for k in node.children()]
-            if isinstance(node, (Project, Select)) and kid_caps and \
+            if isinstance(node, (Project, Select, ColEq)) and kid_caps and \
                     kid_caps[0] is not None and cap > kid_caps[0]:
                 out.append(Diagnostic(
                     "capacity", where,
@@ -475,13 +499,13 @@ def _check_annotations(order: List[Node],
                     f"{kid_caps[0]} — π/σ never grow their block"))
 
 
-def _check_cse(plan: LogicalPlan, out: List[Diagnostic]) -> None:
+def _check_cse(roots: List[Node], out: List[Diagnostic]) -> None:
     """After hash-consing, structurally-equal subplans must be the same
-    object across the per-map relation inputs (the executor memoizes by
-    value, so aliasing is a missed-sharing bug, not a correctness one —
-    but it breaks the canonical form every cache key assumes)."""
+    object across the given roots (the executor memoizes by value, so
+    aliasing is a missed-sharing bug, not a correctness one — but it
+    breaks the canonical form every cache key assumes)."""
     by_value: Dict[Node, int] = {}
-    stack = list(plan.inputs.values())
+    stack = list(roots)
     seen_ids = set()
     while stack:
         n = stack.pop()
@@ -539,8 +563,51 @@ def verify_plan(plan: LogicalPlan, engine: str = "rmlmapper", *,
             _check_emit(node, plan, schemas, diags)
     _check_annotations(order, counts, caps, shard_local, slack, diags)
     if check_cse and check_canonical:
-        _check_cse(plan, diags)
+        _check_cse(list(plan.inputs.values()), diags)
     # the sink wraps fresh EmitTriples objects around the shared subtrees,
     # so emit-level findings can surface once per root — dedupe, keep order
+    diags = list(dict.fromkeys(diags))
+    return VerifyReport(diags, schemas, nodes_checked=len(order))
+
+
+def verify_query_plan(plan, *,
+                      counts: Optional[Mapping[Node, int]] = None,
+                      caps: Optional[Mapping[Node, int]] = None,
+                      sources: Optional[Mapping[str, object]] = None,
+                      shard_local: bool = False,
+                      slack: float = 1.0) -> VerifyReport:
+    """Statically verify a lowered BGP query DAG
+    (:class:`repro.query.lower.QueryPlan`, duck-typed via ``emits()``).
+
+    Runs the same schema inference, canonical-form, CSE and annotation
+    checks as :func:`verify_plan` over the query root — there is no
+    emitter/sink, so the emit checks are replaced by one query-specific
+    invariant: the root must be a δ (query results have set semantics; a
+    non-δ root would leak bag duplicates into the answer). ``sources``
+    defaults to empty (the KG scan is typed int32 without a table in
+    hand); pass ``{KG_SOURCE: kg_table}`` to also check scan-schema drift.
+    """
+    diags: List[Diagnostic] = []
+    schemas: Dict[Node, NodeSchema] = {}
+    roots: List[Node] = list(plan.emits())
+    for root in roots:
+        if not isinstance(root, Distinct):
+            diags.append(Diagnostic(
+                "query-root", _label(root),
+                f"query root is {type(root).__name__}, expected δ — "
+                "answers must have set semantics"))
+    order = _postorder(roots, diags)
+    if order is None:        # cyclic: no safe inference order exists
+        return VerifyReport(diags, schemas, nodes_checked=0)
+    for node in order:
+        _infer(node, schemas, sources or {}, diags)
+        _check_canonical(node, diags)
+        if isinstance(node, EmitTriples):
+            diags.append(Diagnostic(
+                "query-root", _label(node),
+                "EmitTriples inside a query DAG — queries read the KG, "
+                "they never semantify"))
+    _check_annotations(order, counts, caps, shard_local, slack, diags)
+    _check_cse(roots, diags)
     diags = list(dict.fromkeys(diags))
     return VerifyReport(diags, schemas, nodes_checked=len(order))

@@ -1,16 +1,37 @@
-"""Public session API for MapSDI knowledge-graph creation.
+"""Public session API for MapSDI knowledge-graph creation AND querying.
 
-One front door: :class:`KGEngine` (cached plans, incremental ingestion,
-overflow-safe re-execution). The historical free functions in
-``repro.core.pipeline`` / ``repro.core.rdfizer`` are thin deprecated
-wrappers over this package. See ``docs/engine.md``.
+One front door: :class:`KGEngine`, configured by a frozen
+:class:`EngineConfig` (cached plans, incremental ingestion, overflow-safe
+re-execution, jitted BGP queries via :meth:`KGEngine.query`). The stable
+surface is exactly ``__all__`` below::
+
+    from repro.api import EngineConfig, KGEngine, PlanStore, Query
+
+    engine = KGEngine(dis, config=EngineConfig(engine="sdm", dedup="hash"))
+    kg, stats = engine.create_kg()
+    answers = engine.query(Query(patterns=[...]))
+
+:class:`Query` (with :class:`~repro.query.TriplePattern` /
+:class:`~repro.query.QueryFilter`) re-exports from :mod:`repro.query`;
+:class:`Calibration` (the measured-bandwidth cost model fed to
+``EngineConfig(calibrate=...)``) from :mod:`repro.launch.mesh`. The
+historical free functions in ``repro.core.pipeline`` / ``repro.core.
+rdfizer`` are deprecated shims over this package, tagged with removal
+notes. See ``docs/engine.md`` and ``docs/query.md``.
 """
+from repro.launch.mesh import Calibration
+from repro.query import Query, QueryFilter, TriplePattern
+
 from .cache import (PLAN_CACHE, CachedPlan, PlanCache, clear_plan_cache,
                     plan_cache_stats)
+from .config import EngineConfig
 from .engine import KGEngine
 from .store import (PlanStore, default_store_root, resolve_store,
                     store_envelope, store_key)
 
-__all__ = ["CachedPlan", "KGEngine", "PLAN_CACHE", "PlanCache", "PlanStore",
-           "clear_plan_cache", "default_store_root", "plan_cache_stats",
-           "resolve_store", "store_envelope", "store_key"]
+__all__ = [
+    "CachedPlan", "Calibration", "EngineConfig", "KGEngine", "PLAN_CACHE",
+    "PlanCache", "PlanStore", "Query", "QueryFilter", "TriplePattern",
+    "clear_plan_cache", "default_store_root", "plan_cache_stats",
+    "resolve_store", "store_envelope", "store_key",
+]

@@ -1,0 +1,100 @@
+"""``EngineConfig`` — the one frozen value that configures a session.
+
+:class:`~repro.api.engine.KGEngine` historically grew a 12-kwarg
+constructor; every knob was validated (or not) ad hoc at a different
+depth, and the plan-cache/store key derivation read the knobs back off
+scattered instance attributes. ``EngineConfig`` consolidates them::
+
+    engine = KGEngine(dis, config=EngineConfig(engine="sdm", dedup="hash"))
+
+* **Construction-time validation, named errors.** Every field is checked
+  in ``__post_init__`` — a bad ``engine``/``dedup``/``mode``/``slack``/
+  ``mesh_axis``/``join_exchange``/``verify`` raises ``ValueError`` naming
+  the field *before* any planning work starts (previously a bad ``dedup``
+  or ``slack`` only surfaced deep inside the first compile).
+* **Single key input.** :meth:`EngineConfig.cache_sig` is the static
+  configuration component of the plan-cache key (and, through it, of the
+  persistent-store key) — the engine derives both keys from the config,
+  never from loose attributes.
+
+The legacy ``KGEngine(dis, engine=..., dedup=..., ...)`` kwargs still
+work but emit a one-time ``DeprecationWarning``; they are internally
+folded into an ``EngineConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+#: δ strategies :func:`repro.relalg.ops.dedup_rows` implements
+#: (``None`` = engine default, :data:`repro.relalg.DEFAULT_DEDUP`)
+DEDUP_STRATEGIES = (None, "lex", "hash")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen configuration of one :class:`~repro.api.KGEngine` session.
+
+    Field semantics are documented on :class:`~repro.api.KGEngine` (they
+    are the former constructor kwargs, unchanged); this class owns their
+    validation and the derivation of the session's cache-key component.
+    """
+
+    engine: str = "sdm"
+    dedup: Optional[str] = None
+    optimize: bool = True
+    mode: str = "exact"
+    slack: float = 1.0
+    mesh: object = None
+    mesh_axis: str = "data"
+    jit: bool = True
+    join_exchange: str = "auto"
+    plan_store: object = None
+    calibrate: object = False
+    verify: str = "plan"
+
+    def __post_init__(self):
+        from repro.plan.annotate import JOIN_EXCHANGES
+        if self.engine not in ("rmlmapper", "sdm"):
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             "(expected 'rmlmapper' or 'sdm')")
+        if self.dedup not in DEDUP_STRATEGIES:
+            raise ValueError(f"unknown dedup strategy {self.dedup!r} "
+                             "(expected None, 'lex' or 'hash')")
+        if self.mode not in ("exact", "bound"):
+            raise ValueError(f"unknown annotate mode {self.mode!r} "
+                             "(expected 'exact' or 'bound')")
+        try:
+            slack = float(self.slack)
+        except (TypeError, ValueError):
+            raise ValueError(f"bad slack {self.slack!r} (expected a finite "
+                             "number >= 1)") from None
+        if not math.isfinite(slack) or slack < 1.0:
+            raise ValueError(f"bad slack {self.slack!r} (expected a finite "
+                             "number >= 1 — capacities below the annotated "
+                             "counts would truncate on the first run)")
+        object.__setattr__(self, "slack", slack)
+        if not isinstance(self.mesh_axis, str) or not self.mesh_axis:
+            raise ValueError(f"bad mesh_axis {self.mesh_axis!r} "
+                             "(expected a non-empty axis name)")
+        if self.mesh is not None:
+            axes = tuple(getattr(self.mesh, "shape", {}))
+            if self.mesh_axis not in axes:
+                raise ValueError(f"mesh_axis {self.mesh_axis!r} is not an "
+                                 f"axis of the mesh (axes: {axes})")
+        if self.join_exchange not in JOIN_EXCHANGES:
+            raise ValueError(f"unknown join exchange "
+                             f"{self.join_exchange!r} "
+                             f"(expected one of {JOIN_EXCHANGES})")
+        if self.verify not in ("off", "plan", "full"):
+            raise ValueError(f"unknown verify level {self.verify!r} "
+                             "(expected 'off', 'plan' or 'full')")
+
+    def cache_sig(self) -> Tuple:
+        """The static configuration component of the plan-cache key —
+        every config field that changes the traced program and is not
+        already covered by the IR fingerprint, the emitter signature or
+        the mesh signature. Restricted to
+        :func:`repro.api.store.canonical`-admissible values."""
+        return (self.engine, self.dedup, self.mode, self.slack, self.jit)

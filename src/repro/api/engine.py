@@ -7,9 +7,10 @@ historical entry points (``mapsdi_create_kg``, ``make_planned_fn``,
 from scratch, and silently truncated when an extension outgrew its
 plan-time capacities. ``KGEngine`` replaces them with one session object::
 
-    engine = KGEngine(dis, engine="sdm", dedup="hash")
+    engine = KGEngine(dis, config=EngineConfig(engine="sdm", dedup="hash"))
     kg, stats = engine.create_kg()           # plan + compile (or cache hit)
     kg, stats = engine.ingest(delta_sources) # micro-batch extension
+    ans = engine.query(q)                    # jitted BGP over the KG
     engine.stats()                           # session counters
 
 Three mechanisms (see ``docs/engine.md``):
@@ -41,6 +42,7 @@ Three mechanisms (see ``docs/engine.md``):
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Dict, Mapping, Optional, Tuple
 
 import jax
@@ -54,14 +56,36 @@ from repro.plan.annotate import annotate, annotate_local
 from repro.plan.compile import abstract_sources, compile_plan, input_names
 from repro.plan.ir import fingerprint
 from repro.plan.lower import LogicalPlan, lower
+from repro.query import (KG_SOURCE, Query, annotate_query,
+                         annotate_query_local, compile_query, lower_query,
+                         query_session_key)
 from repro.relalg import (PAD_ID, Table, append_rows, bucket_cap, distinct,
                           host_int)
 
 from .cache import PLAN_CACHE, CachedPlan
+from .config import EngineConfig
 from .store import (NATIVE, STABLEHLO, deserialize_native,
                     deserialize_stablehlo, pack_entry_meta, resolve_store,
                     serialize_native, serialize_stablehlo, store_envelope,
                     store_key, unpack_entry_meta)
+
+#: sentinel distinguishing "kwarg not passed" from every real value — a
+#: bare ``KGEngine(dis)`` must not warn; an explicit legacy kwarg must
+_UNSET = object()
+_WARNED_LEGACY: set = set()
+
+
+def _warn_legacy_kwargs(names: Tuple[str, ...]) -> None:
+    """One ``DeprecationWarning`` per distinct legacy-kwarg combination
+    per process — enough to steer migrations without drowning loops."""
+    if names in _WARNED_LEGACY:
+        return
+    _WARNED_LEGACY.add(names)
+    warnings.warn(
+        "KGEngine keyword configuration (" + ", ".join(names) + ") is "
+        "deprecated; pass config=EngineConfig(...) instead — the legacy "
+        "kwargs will be removed once out-of-tree callers have migrated",
+        DeprecationWarning, stacklevel=3)
 
 
 def _to_bucket(table: Table) -> Table:
@@ -105,6 +129,16 @@ class KGEngine:
         The data integration system. The engine owns a session *view* of
         its sources (``dis`` itself is never mutated); ``ingest`` appends
         to the view.
+    config
+        An :class:`~repro.api.EngineConfig` holding every knob below —
+        the canonical spelling::
+
+            KGEngine(dis, config=EngineConfig(engine="sdm", dedup="hash"))
+
+        The individual keyword arguments still work but are deprecated
+        (one-time ``DeprecationWarning``); passing both raises
+        ``ValueError``. All validation lives in ``EngineConfig`` — bad
+        values raise named errors at construction, before any planning.
     engine
         ``"sdm"`` (duplicate-aware per-map δ) or ``"rmlmapper"`` (blind
         generation, sink δ only).
@@ -166,23 +200,40 @@ class KGEngine:
         ``explain()`` shows the provenance as each ⋈ line's ``cost=`` bit.
     """
 
-    def __init__(self, dis: DIS, engine: str = "sdm",
-                 dedup: Optional[str] = None, *, optimize: bool = True,
-                 mode: str = "exact", slack: float = 1.0, mesh=None,
-                 mesh_axis: str = "data", jit: bool = True,
-                 join_exchange: str = "auto", plan_store=None,
-                 calibrate=False, verify: str = "plan"):
-        from repro.plan.annotate import JOIN_EXCHANGES
-        if engine not in ("rmlmapper", "sdm"):
-            raise ValueError(f"unknown engine {engine!r}")
-        if mode not in ("exact", "bound"):
-            raise ValueError(f"unknown annotate mode {mode!r}")
-        if join_exchange not in JOIN_EXCHANGES:
-            raise ValueError(f"unknown join exchange {join_exchange!r} "
-                             f"(expected one of {JOIN_EXCHANGES})")
-        if verify not in ("off", "plan", "full"):
-            raise ValueError(f"unknown verify level {verify!r} "
-                             "(expected 'off', 'plan' or 'full')")
+    def __init__(self, dis: DIS, engine: str = _UNSET,
+                 dedup: Optional[str] = _UNSET, *,
+                 config: Optional[EngineConfig] = None,
+                 optimize: bool = _UNSET, mode: str = _UNSET,
+                 slack: float = _UNSET, mesh=_UNSET, mesh_axis: str = _UNSET,
+                 jit: bool = _UNSET, join_exchange: str = _UNSET,
+                 plan_store=_UNSET, calibrate=_UNSET, verify: str = _UNSET):
+        legacy = {name: value for name, value in (
+            ("engine", engine), ("dedup", dedup), ("optimize", optimize),
+            ("mode", mode), ("slack", slack), ("mesh", mesh),
+            ("mesh_axis", mesh_axis), ("jit", jit),
+            ("join_exchange", join_exchange), ("plan_store", plan_store),
+            ("calibrate", calibrate), ("verify", verify))
+            if value is not _UNSET}
+        if config is not None:
+            if legacy:
+                raise ValueError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    "keyword arguments, not both (got config plus "
+                    f"{sorted(legacy)})")
+            if not isinstance(config, EngineConfig):
+                raise TypeError("config must be an EngineConfig, got "
+                                f"{type(config).__name__}")
+        else:
+            if legacy:
+                _warn_legacy_kwargs(tuple(sorted(legacy)))
+            config = EngineConfig(**legacy)   # validates every field
+        self.config = config
+        engine, dedup = config.engine, config.dedup
+        optimize, mode, slack = config.optimize, config.mode, config.slack
+        mesh, mesh_axis, jit = config.mesh, config.mesh_axis, config.jit
+        join_exchange = config.join_exchange
+        plan_store, calibrate = config.plan_store, config.calibrate
+        verify = config.verify
         # static verification level: "plan" (default) gates every rewrite
         # with its soundness contract and verifies each annotated plan
         # before compiling (and every store-rehydrated entry before
@@ -263,6 +314,23 @@ class KGEngine:
         self._cache_hits = 0
         self._cache_misses = 0
         self._last: Dict[str, object] = {}
+        # query tier (KGEngine.query): the session KG the BGP engine reads,
+        # its capacity-bucketed view and sharded device blocks (both
+        # identity-keyed — a new KG from run()/ingest() re-buckets and
+        # re-shards), the query-side sticky safe-exchange escalation, and
+        # the per-session query counters surfaced as ``stats()["query"]``
+        self._kg: Optional[Table] = None
+        self._kg_bucket: Optional[Tuple[Table, Table]] = None
+        self._kg_shard: Optional[Tuple] = None
+        self._q_safe_exchange = False
+        self._q_executions = 0
+        self._q_cache_hits = 0
+        self._q_cache_misses = 0
+        self._q_recompiles = 0
+        self._q_store_hits = 0
+        self._q_store_misses = 0
+        self._q_store_rejects = 0
+        self._q_last: Dict[str, object] = {}
 
     # -- plan cache ----------------------------------------------------------
     @property
@@ -352,9 +420,10 @@ class KGEngine:
             len(self._dis.vocab) < (1 << 16), self.join_exchange, cal_sig)
 
     def _key(self, sources: Mapping[str, Table]) -> Tuple:
-        return (self._ir_fp, self._emit_sig, self.engine, self.dedup,
-                self.mode, self.slack, self.jit, self._mesh_sig(sources),
-                self._source_sig(sources))
+        # the static configuration component comes off the EngineConfig —
+        # the one input to key derivation — never off loose attributes
+        return (self._ir_fp, self._emit_sig) + self.config.cache_sig() + (
+            self._mesh_sig(sources), self._source_sig(sources))
 
     def _rewrite_gate(self):
         """The optimizer's per-rewrite soundness hook (``None`` when
@@ -651,6 +720,7 @@ class KGEngine:
         self._last = {"entry": entry, "cache_hit": hit, "first": first,
                       "plan_seconds": plan_s, "exec_seconds": exec_s,
                       "sources": sources}
+        self._kg = kg          # the device-resident KG the query tier reads
         return kg, raw
 
     __call__ = run
@@ -783,6 +853,369 @@ class KGEngine:
         kg = distinct(Table.from_codes(rows, TRIPLE_ATTRS), dedup=self.dedup)
         return kg, raw, entry, hit
 
+    # -- queries -------------------------------------------------------------
+    def _kg_table(self, kg: Optional[Table]) -> Table:
+        """Resolve + bucket the KG table a query reads: the session KG by
+        default (materialized on first use), an explicit ``kg=`` override
+        otherwise. The bucketed view is cached on the KG object's identity,
+        so repeated queries over one KG share a buffer (and, on a mesh,
+        the resident shard blocks)."""
+        if kg is None:
+            if self._kg is None:
+                self.run()          # materialize the session KG first
+            kg = self._kg
+        if tuple(kg.attrs) != TRIPLE_ATTRS:
+            raise ValueError("query target must be a coded KG table with "
+                             f"attrs {TRIPLE_ATTRS}, got {tuple(kg.attrs)}")
+        hit = self._kg_bucket
+        if hit is not None and hit[0] is kg:
+            return hit[1]
+        bucketed = _to_bucket(kg)
+        self._kg_bucket = (kg, bucketed)
+        return bucketed
+
+    def _kg_cap_local(self, kg: Table) -> int:
+        n = int(self.mesh.shape[self.mesh_axis])
+        return bucket_cap(-(-kg.capacity // n))
+
+    def _query_mesh_sig(self, kg: Table) -> Optional[Tuple]:
+        """Query analogue of :meth:`_mesh_sig`: same static mesh identity
+        and exchange/calibration components, with the KG's shard-local
+        capacity bucket as the (single) source term."""
+        if self.mesh is None:
+            return None
+        cal_sig = (None if self.calibration is None
+                   else self.calibration.signature())
+        return self._mesh_static + (
+            self._kg_cap_local(kg), len(self._dis.vocab) < (1 << 16),
+            self.join_exchange, cal_sig)
+
+    def _query_key(self, query: Query, kg: Table) -> Tuple:
+        c = self.config
+        return query_session_key(query, dedup=c.dedup, mode=c.mode,
+                                 slack=c.slack, jit=c.jit,
+                                 kg_bucket_cap=kg.capacity,
+                                 mesh_sig=self._query_mesh_sig(kg))
+
+    def _verify_query_built(self, qplan, counts, caps, sources,
+                            shard_local: bool) -> None:
+        if self.verify == "off":
+            return
+        from repro.analysis.verify import verify_query_plan
+        verify_query_plan(qplan, counts=counts, caps=caps, sources=sources,
+                          shard_local=shard_local,
+                          slack=self.slack).raise_for_status()
+        self._verify_plan_checks += 1
+
+    def _build_query(self, key: Tuple, qplan, kg: Table,
+                     mode: Optional[str] = None,
+                     floor_caps: Optional[Mapping] = None,
+                     safe_exchange: bool = False) -> CachedPlan:
+        """Query sibling of :meth:`_build`: annotate (globally or
+        shard-locally), statically verify, compile (single-device or fused
+        mesh), optionally audit and AOT-serialize to the plan store."""
+        t0 = time.perf_counter()
+        safe_exchange = safe_exchange or self._q_safe_exchange
+        self._q_safe_exchange = safe_exchange
+        sources = {KG_SOURCE: kg}
+        aot = self._store is not None and self.jit
+        abstract = None
+        if self.mesh is None:
+            counts, caps = annotate_query(qplan, sources,
+                                          mode=mode or self.mode,
+                                          slack=self.slack,
+                                          cap_fn=bucket_cap)
+            if floor_caps:  # growth must be monotone or overflow ping-pongs
+                caps = {n: max(c, floor_caps.get(n, 0))
+                        for n, c in caps.items()}
+            self._verify_query_built(qplan, counts, caps, sources,
+                                     shard_local=False)
+            fn = compile_query(qplan, dedup=self.dedup, caps=caps,
+                               jit=self.jit, report_overflow=True)
+            if aot or self.verify == "full":
+                abstract = (abstract_sources(sources),)
+            if self.verify == "full":
+                from repro.analysis.audit import audit_closure
+                audit_closure(fn, abstract,
+                              expected_counts={"all_gather": 0,
+                                               "all_to_all": 0},
+                              single_device=True).raise_for_status()
+                self._verify_audits += 1
+            entry = CachedPlan(key=key, plan=qplan, emitter=None,
+                               counts=counts, caps=caps, fn=fn,
+                               engine=self.engine, dedup=self.dedup,
+                               mode=mode or self.mode,
+                               build_seconds=time.perf_counter() - t0)
+        else:
+            from repro.query.mesh import (compile_query_mesh,
+                                          query_mesh_abstract_inputs)
+            n = int(self.mesh.shape[self.mesh_axis])
+            cap_local = self._kg_cap_local(kg)
+            counts, caps, exchanges = annotate_query_local(
+                qplan, n_shards=n, cap_locals={KG_SOURCE: cap_local},
+                mode=mode or self.mode, slack=self.slack,
+                cap_fn=bucket_cap, sources=sources,
+                join_exchange=self.join_exchange,
+                safe_exchange=safe_exchange, calibration=self.calibration)
+            if floor_caps:
+                caps = {n_: max(c, floor_caps.get(n_, 0))
+                        for n_, c in caps.items()}
+            self._verify_query_built(qplan, counts, caps, sources,
+                                     shard_local=True)
+            fn, out_cap_local = compile_query_mesh(
+                qplan, self.mesh, self.mesh_axis, dedup=self.dedup,
+                caps=caps, cap_local=cap_local,
+                pack_u16=len(self._dis.vocab) < (1 << 16), jit=self.jit,
+                exchanges=exchanges, safe_exchange=safe_exchange)
+            if aot or self.verify == "full":
+                abstract = query_mesh_abstract_inputs(
+                    cap_local, n, self.mesh, self.mesh_axis)
+            if self.verify == "full":
+                from repro.analysis.audit import (
+                    audit_closure, expected_query_collectives)
+                audit_closure(
+                    fn, abstract, n_shards=n,
+                    expected_counts=expected_query_collectives(
+                        qplan, n, exchanges=exchanges)).raise_for_status()
+                self._verify_audits += 1
+            entry = CachedPlan(key=key, plan=qplan, emitter=None,
+                               counts=counts, caps=caps, fn=fn,
+                               engine=self.engine, dedup=self.dedup,
+                               mode=mode or self.mode,
+                               build_seconds=time.perf_counter() - t0,
+                               cap_locals={KG_SOURCE: cap_local},
+                               out_cap_local=out_cap_local,
+                               exchanges=exchanges,
+                               safe_exchange=safe_exchange)
+        if aot:
+            try:
+                entry.fn = fn.lower(*abstract).compile()
+            except Exception:   # AOT unavailable: keep the jitted closure
+                self._store.write_errors += 1
+                aot = False
+            entry.build_seconds = time.perf_counter() - t0
+        PLAN_CACHE.put(key, entry)
+        if aot:
+            self._store_save(entry, fn, abstract)
+        return entry
+
+    def _query_store_load(self, key: Tuple, qplan,
+                          sources: Mapping[str, Table]
+                          ) -> Optional[CachedPlan]:
+        """Query sibling of :meth:`_store_load`: the stored node-index
+        metadata rehydrates against THIS process's freshly lowered query
+        DAG (lowering is deterministic, so node_order matches); every
+        failure degrades to a fresh compile."""
+        store = self._store
+        if store is None or not self.jit:
+            return None
+        try:
+            env = store_envelope(self.calibration)
+            skey = store_key(key, env)
+        except TypeError:       # a non-canonical key component: no store
+            self._q_store_rejects += 1
+            return None
+        res = store.load(skey, env)
+        if res.status == "miss":
+            self._q_store_misses += 1
+            return None
+        if res.status == "reject":
+            self._q_store_rejects += 1
+            return None
+        t0 = time.perf_counter()
+        try:
+            meta = res.header["meta"]
+            if (meta.get("engine") != self.engine
+                    or meta.get("dedup") != self.dedup):
+                raise ValueError("entry engine/dedup mismatch")
+            unpacked = unpack_entry_meta(meta, qplan)
+            if ("cap_locals" in unpacked) != (self.mesh is not None):
+                raise ValueError("mesh/single-device entry mismatch")
+            if self.verify != "off":
+                from repro.analysis.verify import verify_query_plan
+                report = verify_query_plan(
+                    qplan, counts=unpacked["counts"],
+                    caps=unpacked["caps"], sources=sources,
+                    shard_local="cap_locals" in unpacked, slack=self.slack)
+                if not report.ok:
+                    raise ValueError("stored query metadata failed static "
+                                     "verification: "
+                                     + "; ".join(str(d) for d in
+                                                 report.diagnostics[:3]))
+                self._verify_store_checks += 1
+            fn = None
+            if NATIVE in res.payloads:
+                try:          # fast tier: zero-recompile executable
+                    fn = deserialize_native(res.payloads[NATIVE])
+                except Exception:
+                    fn = None
+            if fn is None and STABLEHLO in res.payloads:
+                fn = deserialize_stablehlo(res.payloads[STABLEHLO])
+            if fn is None:
+                raise ValueError("no loadable payload")
+        except Exception as e:  # rehydration failure degrades to compile
+            self._q_store_rejects += 1
+            store._reject(f"rehydrate: {type(e).__name__}: {e}")
+            return None
+        self._q_store_hits += 1
+        if unpacked.get("safe_exchange"):
+            self._q_safe_exchange = True
+        entry = CachedPlan(key=key, plan=qplan, emitter=None,
+                           counts=unpacked["counts"], caps=unpacked["caps"],
+                           fn=fn, engine=self.engine, dedup=self.dedup,
+                           mode=unpacked["mode"],
+                           build_seconds=time.perf_counter() - t0,
+                           cap_locals=unpacked.get("cap_locals"),
+                           out_cap_local=unpacked.get("out_cap_local"),
+                           exchanges=unpacked.get("exchanges"),
+                           safe_exchange=unpacked.get("safe_exchange",
+                                                      False),
+                           origin="store")
+        PLAN_CACHE.put(key, entry)
+        return entry
+
+    def query(self, q: Query, kg: Optional[Table] = None) -> Table:
+        """Evaluate a BGP :class:`~repro.query.Query` over the
+        device-resident KG; returns the answer :class:`Table`
+        (``SELECT DISTINCT`` semantics, one ``v__t``/``v__v`` column pair
+        per term variable, ``v__p`` per predicate variable).
+
+        The query goes through the same machinery as creation: lowered to
+        the relational IR (:func:`repro.query.lower_query`), annotated with
+        capacities, statically verified per the session's ``verify`` level,
+        compiled to one jitted device-resident closure (fused ``shard_map``
+        on a mesh session), cached in the process-wide plan cache under its
+        own structural-fingerprint key tier, and AOT-persisted to the plan
+        store when one is configured. A truncation flag triggers the same
+        transparent recompile-with-exact-caps ladder as :meth:`run`.
+
+        ``kg`` defaults to the session KG (materialized via :meth:`run` on
+        first use); pass an explicit coded triple table to query something
+        else (it shares the session's vocab codes by construction)."""
+        t0 = time.perf_counter()
+        table = self._kg_table(kg)
+        qplan = lower_query(q)
+        sources = {KG_SOURCE: table}
+        key = self._query_key(q, table)
+        entry = PLAN_CACHE.get(key)
+        hit = entry is not None
+        if hit:
+            self._q_cache_hits += 1
+        else:
+            self._q_cache_misses += 1
+            entry = self._query_store_load(key, qplan, sources)
+            if entry is None:
+                entry = self._build_query(key, qplan, table)
+        plan_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        if self.mesh is not None:
+            result, entry, hit = self._run_query_mesh(entry, qplan, table,
+                                                      hit)
+        else:
+            try:
+                result, over = entry.fn(sources)
+            except Exception:
+                # store-loaded executable failed at call time (see run())
+                if entry.origin != "store":
+                    raise
+                self._q_store_rejects += 1
+                hit = False
+                entry = self._build_query(key, qplan, table)
+                result, over = entry.fn(sources)
+            if host_int(over):
+                hit = False   # the hit did not actually serve this query
+                self._q_recompiles += 1
+                entry = self._build_query(key, qplan, table, mode="exact",
+                                          floor_caps=entry.caps)
+                result, over = entry.fn(sources)
+                if host_int(over):  # exact caps cannot under-size
+                    raise RuntimeError("query capacity overflow persisted "
+                                       "after recompile — please report")
+        self._q_executions += 1
+        self._q_last = {"entry": entry, "cache_hit": hit,
+                        "plan_seconds": plan_s,
+                        "exec_seconds": time.perf_counter() - t1}
+        return result
+
+    def _run_query_mesh(self, entry: CachedPlan, qplan, table: Table,
+                        hit: bool):
+        """Execute the fused mesh query closure; mirrors :meth:`_run_mesh`:
+        shard the (bucketed) KG once per KG object, run, recompile on
+        overflow with exact caps + hard-safe exchange buckets, gather only
+        the final rows and δ them canonically — which is what makes the
+        mesh answer bit-identical to the single-device one."""
+        from repro.core.distributed import unshard_rows
+        datas, counts = self._shard_kg(table, entry.cap_locals[KG_SOURCE])
+        try:
+            out_d, out_c, over = entry.fn(datas, counts)
+        except Exception:
+            if entry.origin != "store":
+                raise
+            self._q_store_rejects += 1
+            hit = False
+            entry = self._build_query(entry.key, qplan, table)
+            out_d, out_c, over = entry.fn(datas, counts)
+        if host_int(over):
+            hit = False
+            self._q_recompiles += 1
+            entry = self._build_query(entry.key, qplan, table, mode="exact",
+                                      floor_caps=entry.caps,
+                                      safe_exchange=True)
+            out_d, out_c, over = entry.fn(datas, counts)
+            if host_int(over):   # exact caps + safe buckets cannot under-size
+                raise RuntimeError("mesh query capacity overflow persisted "
+                                   "after recompile — please report")
+        rows = unshard_rows(out_d, out_c, entry.out_cap_local)
+        result = distinct(Table.from_codes(rows, entry.plan.out_attrs),
+                          dedup=self.dedup)
+        return result, entry, hit
+
+    def _shard_kg(self, table: Table, cap_local: int) -> Tuple:
+        """Shard the bucketed KG onto the mesh, cached on the table
+        object's identity (a fresh KG from run()/ingest() re-shards)."""
+        hit = self._kg_shard
+        if hit is not None and hit[0] is table and hit[1] == cap_local:
+            return hit[2], hit[3]
+        from repro.core.distributed import shard_table
+        d, c, _ = shard_table(table, self.mesh, self.mesh_axis,
+                              cap_local=cap_local)
+        self._kg_shard = (table, cap_local, d, c)
+        return d, c
+
+    def explain_query(self, q: Query, kg: Optional[Table] = None) -> str:
+        """Annotated query-plan tree — the query analogue of
+        :meth:`explain`: per-node rows/caps from the session's annotation
+        mode, per-⋈ exchange decisions and wire-byte estimates on a mesh,
+        and the static verifier's schema/verdict when verification is on."""
+        from repro.plan.explain import dump_root
+        table = self._kg_table(kg)
+        qplan = lower_query(q)
+        sources = {KG_SOURCE: table}
+        exchanges = None
+        if self.mesh is None:
+            counts, caps = annotate_query(qplan, sources, mode=self.mode,
+                                          slack=self.slack,
+                                          cap_fn=bucket_cap)
+        else:
+            counts, caps, exchanges = annotate_query_local(
+                qplan, n_shards=int(self.mesh.shape[self.mesh_axis]),
+                cap_locals={KG_SOURCE: self._kg_cap_local(table)},
+                mode=self.mode, slack=self.slack, cap_fn=bucket_cap,
+                sources=sources, join_exchange=self.join_exchange,
+                safe_exchange=self._q_safe_exchange,
+                calibration=self.calibration)
+        schemas = verdict = None
+        if self.verify != "off":
+            from repro.analysis.verify import verify_query_plan
+            report = verify_query_plan(qplan, counts=counts, caps=caps,
+                                       sources=sources,
+                                       shard_local=self.mesh is not None,
+                                       slack=self.slack)
+            schemas, verdict = report.schemas, report.describe()
+        return dump_root(qplan.root, counts=counts, caps=caps,
+                         exchanges=exchanges, schemas=schemas,
+                         verdict=verdict)
+
     # -- stats ---------------------------------------------------------------
     @property
     def vocab(self):
@@ -866,8 +1299,21 @@ class KGEngine:
             "rule3": self._tstats.rule3_merges,
             "sigma": self._tstats.sigma_pushdowns,
             "cse_shared": self._tstats.cse_shared_subplans,
+            "query": {
+                "executions": self._q_executions,
+                "cache_hits": self._q_cache_hits,
+                "cache_misses": self._q_cache_misses,
+                "recompiles": self._q_recompiles,
+                "store_hits": self._q_store_hits,
+                "store_misses": self._q_store_misses,
+                "store_rejects": self._q_store_rejects,
+            },
         }
         if self._last:
             out["last_preprocess_seconds"] = self._last["plan_seconds"]
             out["last_semantify_seconds"] = self._last["exec_seconds"]
+        if self._q_last:
+            out["query"]["last_plan_seconds"] = self._q_last["plan_seconds"]
+            out["query"]["last_exec_seconds"] = self._q_last["exec_seconds"]
+            out["query"]["last_cache_hit"] = self._q_last["cache_hit"]
         return out

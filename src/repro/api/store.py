@@ -514,6 +514,7 @@ def _populate(root: str, n_rows: int) -> int:
     engine × dedup, plus a fused-mesh session over all visible devices) —
     a separate process then runs the tier-1 plan-store tests against the
     populated store."""
+    from repro.api.config import EngineConfig
     from repro.api.engine import KGEngine
     from repro.api.store import PlanStore as _PlanStore   # NOT the
     # ``__main__`` alias of this class: under ``python -m repro.api.store``
@@ -525,12 +526,14 @@ def _populate(root: str, n_rows: int) -> int:
     for engine in ("rmlmapper", "sdm"):
         for dedup in ("lex", "hash"):
             session = KGEngine(make_group_b_dis(n_rows, 0.6, seed=0),
-                               engine=engine, dedup=dedup, plan_store=store)
+                               config=EngineConfig(engine=engine,
+                                                   dedup=dedup,
+                                                   plan_store=store))
             session.create_kg()
     mesh = make_mesh((jax.device_count(),), ("data",))
     session = KGEngine(make_group_b_dis(n_rows, 0.6, seed=0),
-                       engine="sdm", dedup="hash", mesh=mesh,
-                       plan_store=store)
+                       config=EngineConfig(engine="sdm", dedup="hash",
+                                           mesh=mesh, plan_store=store))
     session.create_kg()
     print(json.dumps(store.stats(), indent=1))
     return 0 if store.writes > 0 and store.write_errors == 0 else 1

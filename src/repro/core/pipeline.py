@@ -48,13 +48,20 @@ def mapsdi_create_kg(dis: DIS, engine: Engine = "sdm",
     strategy (``"lex"`` | ``"hash"``) for both the planned Rule 1–3
     pre-processing and the engine sinks; None = engine default.
     """
-    from repro.api import KGEngine
-    return KGEngine(dis, engine=engine, dedup=dedup).create_kg()
+    from repro.api import EngineConfig, KGEngine
+    config = EngineConfig(engine=engine, dedup=dedup)
+    return KGEngine(dis, config=config).create_kg()
 
 
 def make_planned_fn(dis: DIS, engine: Engine = "sdm",
                     dedup: Optional[str] = None):
     """DEPRECATED: use ``KGEngine(dis).run`` (or ``.ingest``).
+
+    .. deprecated:: removal target — this shim goes away together with the
+       other ``repro.core.pipeline``/``rdfize`` compatibility wrappers once
+       the ``repro.api`` surface (``KGEngine`` + ``EngineConfig``) has been
+       the documented entry point for two releases; no in-repo caller uses
+       it outside its own tests.
 
     Returns ``(fn, plan)`` where ``fn(raw_sources) -> (kg, raw)`` executes
     the session's cached closure — steady-state re-execution over
@@ -63,8 +70,8 @@ def make_planned_fn(dis: DIS, engine: Engine = "sdm",
     one transparent recompile instead of silent truncation."""
     _warn_once("make_planned_fn",
                "engine = KGEngine(dis); engine.run(sources)")
-    from repro.api import KGEngine
-    eng = KGEngine(dis, engine=engine, dedup=dedup)
+    from repro.api import EngineConfig, KGEngine
+    eng = KGEngine(dis, config=EngineConfig(engine=engine, dedup=dedup))
     return eng.run, eng.plan
 
 
@@ -73,15 +80,19 @@ def make_mapsdi_fn(dis: DIS, engine: Engine = "sdm",
     """DEPRECATED: use ``apply_mapsdi`` + ``KGEngine`` (or just
     ``KGEngine(dis)``).
 
+    .. deprecated:: removal target — scheduled for deletion with
+       ``make_planned_fn`` and ``rdfize`` (see the note there); migrate to
+       ``apply_mapsdi`` + ``KGEngine(dis2, config=EngineConfig(...))``.
+
     Pre-transform once (planning + one materialization), return a semantify
     closure over the *transformed* sources — the historical steady-state
     shape, where pre-processed extensions exist as concrete tables (e.g. to
     be shipped to another pod)."""
     _warn_once("make_mapsdi_fn",
                "dis2, _ = apply_mapsdi(dis); engine = KGEngine(dis2)")
-    from repro.api import KGEngine
+    from repro.api import EngineConfig, KGEngine
     dis2, _ = apply_mapsdi(dis, dedup=dedup)
-    eng = KGEngine(dis2, engine=engine, dedup=dedup)
+    eng = KGEngine(dis2, config=EngineConfig(engine=engine, dedup=dedup))
 
     def fn(sources: Optional[Dict[str, Table]] = None):
         return eng.run(dis2.sources if sources is None else sources)

@@ -274,17 +274,24 @@ def rdfize(dis: DIS, engine: Engine = "rmlmapper",
            dedup: Optional[str] = None) -> Tuple[Table, int]:
     """DEPRECATED eager wrapper: ``RDFize(DIS)`` -> (KG, raw count).
 
+    .. deprecated:: removal target — goes away together with the
+       ``repro.core.pipeline`` shims (``make_planned_fn``,
+       ``make_mapsdi_fn``) once the ``repro.api`` surface (``KGEngine`` +
+       ``EngineConfig``) has been the documented entry point for two
+       releases.
+
     Delegates to a :class:`repro.api.KGEngine` session with
     ``optimize=False`` (blind evaluation of the un-rewritten rules — the
     semantics ``raw`` has always measured), so repeated rdfize calls over
     structurally-identical DISes share one cached closure. Use
-    ``KGEngine(dis, engine, dedup, optimize=False)`` directly for session
-    state (ingestion, stats)."""
-    from repro.api import KGEngine
+    ``KGEngine(dis, config=EngineConfig(engine=..., dedup=...,
+    optimize=False))`` directly for session state (ingestion, stats)."""
+    from repro.api import EngineConfig, KGEngine
     from .pipeline import _warn_once
     _warn_once("rdfize",
-               "KGEngine(dis, engine, dedup, optimize=False).run()")
-    kg, raw = KGEngine(dis, engine, dedup, optimize=False).run()
+               "KGEngine(dis, config=EngineConfig(optimize=False)).run()")
+    config = EngineConfig(engine=engine, dedup=dedup, optimize=False)
+    kg, raw = KGEngine(dis, config=config).run()
     return kg, host_int(raw)
 
 

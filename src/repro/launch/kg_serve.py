@@ -22,7 +22,7 @@ import argparse
 import time
 from typing import List
 
-from repro.api import KGEngine
+from repro.api import EngineConfig, KGEngine
 from repro.data.synthetic import (make_group_b_dis,
                                   make_group_b_extension_records)
 from repro.relalg import Table
@@ -50,8 +50,9 @@ def main(argv=None) -> int:
 
     dis = make_group_b_dis(args.rows, 0.6, seed=args.seed)
     t0 = time.perf_counter()
-    engine = KGEngine(dis, engine=args.engine, dedup=args.dedup,
-                      mode=args.mode, slack=args.slack, mesh=mesh)
+    engine = KGEngine(dis, config=EngineConfig(
+        engine=args.engine, dedup=args.dedup, mode=args.mode,
+        slack=args.slack, mesh=mesh))
     kg, stats = engine.create_kg()
     print(f"seed: {stats['kg_triples']} triples in "
           f"{time.perf_counter() - t0:.2f}s "

@@ -28,8 +28,8 @@ from repro.relalg import (PAD_ID, Table, distinct, equi_join, project,
 from repro.relalg.guard import host_int
 from repro.relalg.ops import _masked_data, compact
 
-from .ir import (Distinct, EmitTriples, EquiJoin, Node, Project, Scan,
-                 Select, Union, iter_nodes)
+from .ir import (ColEq, Distinct, EmitTriples, EquiJoin, Node, Project,
+                 Scan, Select, Union, iter_nodes)
 from .lower import LogicalPlan, selection_preds
 
 
@@ -100,6 +100,15 @@ def execute_node(node: Node, sources: Mapping[str, Table],
         child = execute_node(node.child, sources, memo, emitter, dedup, caps,
                              overflow, **kw)
         sel = select_mask(child, _pred_mask(child, node.preds))
+        cap = caps.get(node)
+        if overflow is not None and cap is not None:
+            overflow.append(sel.count > jnp.int32(cap))
+        out = _fit(sel, cap)
+    elif isinstance(node, ColEq):
+        child = execute_node(node.child, sources, memo, emitter, dedup, caps,
+                             overflow, **kw)
+        mask = child.column(node.left_attr) == child.column(node.right_attr)
+        sel = select_mask(child, mask)
         cap = caps.get(node)
         if overflow is not None and cap is not None:
             overflow.append(sel.count > jnp.int32(cap))

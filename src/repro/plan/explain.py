@@ -13,8 +13,8 @@ from __future__ import annotations
 from typing import Dict, List, Mapping, Optional
 
 from .annotate import JoinExchange, annotate, annotate_local
-from .ir import (Distinct, EmitTriples, EquiJoin, Node, Project, Scan,
-                 Select, Union)
+from .ir import (ColEq, Distinct, EmitTriples, EquiJoin, Node, Project,
+                 Scan, Select, Union)
 from .lower import LogicalPlan
 
 
@@ -26,6 +26,8 @@ def _label(node: Node) -> str:
         return f"π [{cols}]"
     if isinstance(node, Select):
         return "σ [" + " ∧ ".join(p.describe() for p in node.preds) + "]"
+    if isinstance(node, ColEq):
+        return f"σ= [{node.left_attr} = {node.right_attr}]"
     if isinstance(node, Distinct):
         return "δ"
     if isinstance(node, Union):
@@ -63,11 +65,23 @@ def dump_plan(plan: LogicalPlan, engine: str = "rmlmapper",
     verifier's per-node inference, ``repro.analysis.verify_plan(...)
     .schemas``) adds a ``cols=`` bit per node; ``verdict`` (e.g.
     ``report.describe()``) is printed as a header above the tree."""
+    return dump_root(plan.sink(engine), counts=counts, caps=caps,
+                     exchanges=exchanges, schemas=schemas, verdict=verdict)
+
+
+def dump_root(root: Node,
+              counts: Optional[Mapping[Node, int]] = None,
+              caps: Optional[Mapping[Node, int]] = None,
+              exchanges: Optional[Mapping[Node, JoinExchange]] = None,
+              schemas: Optional[Mapping[Node, object]] = None,
+              verdict: Optional[str] = None) -> str:
+    """Root-generic body of :func:`dump_plan` — renders any IR DAG from
+    its root node. Query plans (whose root is the answer δ rather than an
+    engine sink) use this directly via ``KGEngine.explain_query``."""
     counts = counts or {}
     caps = caps or {}
     exchanges = exchanges or {}
     schemas = schemas or {}
-    root = plan.sink(engine)
     shared_ids: Dict[int, int] = {}
     seen_multi = _multi_referenced(root)
     lines: List[str] = []

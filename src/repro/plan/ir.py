@@ -114,6 +114,43 @@ class Distinct(Node):
 
 
 @dataclasses.dataclass(frozen=True)
+class ColEq(Node):
+    """σ= — keep rows whose ``left_attr`` column equals ``right_attr``.
+
+    The column-vs-column counterpart of :class:`Select`'s column-vs-constant
+    predicates. The query compiler (:mod:`repro.query`) needs it because a
+    coded RDF term is a (template, value) column *pair* while
+    :class:`EquiJoin` equates a single column pair: a BGP join on a shared
+    variable joins on the value columns and then checks the template
+    columns (and any further shared variables) with ``ColEq``. Attrs are
+    kept in sorted order so structurally-equal filters hash-cons.
+    """
+
+    child: Node
+    left_attr: str
+    right_attr: str
+
+    def __post_init__(self):
+        if self.left_attr == self.right_attr:
+            raise ValueError(f"ColEq on a single column {self.left_attr!r}")
+
+    @property
+    def attrs(self) -> Tuple[str, ...]:
+        return self.child.attrs
+
+    def children(self) -> Tuple[Node, ...]:
+        return (self.child,)
+
+
+def make_coleq(child: Node, left_attr: str, right_attr: str) -> Node:
+    """Canonicalizing ``ColEq`` constructor: orders the attr pair so the
+    commutative filter has one structural form."""
+    if left_attr > right_attr:
+        left_attr, right_attr = right_attr, left_attr
+    return ColEq(child, left_attr, right_attr)
+
+
+@dataclasses.dataclass(frozen=True)
 class Union(Node):
     """∪ — n-ary bag union; children share an attr *set* (aligned by name
     to the first child's order at execution)."""
@@ -210,6 +247,8 @@ def intern(node: Node, memo: Optional[Dict[Node, Node]] = None) -> Node:
             return hit
         if isinstance(n, Select):
             out: Node = Select(go(n.child), n.preds)
+        elif isinstance(n, ColEq):
+            out = ColEq(go(n.child), n.left_attr, n.right_attr)
         elif isinstance(n, Project):
             out = Project(go(n.child), n.spec)
         elif isinstance(n, Distinct):
@@ -252,6 +291,9 @@ def fingerprint(roots: Sequence[Node]) -> str:
         elif isinstance(n, Select):
             preds = tuple((p.attr, p.op, p.code) for p in n.preds)
             desc = f"select {visit(n.child)} {preds}"
+        elif isinstance(n, ColEq):
+            desc = (f"coleq {visit(n.child)} "
+                    f"{n.left_attr} {n.right_attr}")
         elif isinstance(n, Project):
             desc = f"project {visit(n.child)} {n.spec}"
         elif isinstance(n, Distinct):

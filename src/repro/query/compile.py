@@ -1,0 +1,43 @@
+"""Compiling a lowered query DAG to device execution (single device).
+
+Same machinery as :func:`repro.plan.compile.compile_plan`, minus the
+emitter/sink: the query root is already the δ the spec's set semantics
+require, so the closure is ``{KG_SOURCE: Table} -> (result, overflowed)``
+with every capped node reporting the same truncation flag the creation
+path uses — ``KGEngine.query`` answers an overflow with one exact
+recompile at floored capacities, exactly like ``run()``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.plan.compile import execute_node
+from repro.plan.ir import Node
+from repro.relalg import Table
+
+from .lower import QueryPlan
+
+
+def compile_query(plan: QueryPlan, dedup: Optional[str] = None,
+                  caps: Optional[Mapping[Node, int]] = None,
+                  jit: bool = True, report_overflow: bool = False):
+    """Lower a query DAG to one ``sources -> result`` closure (jitted by
+    default); with ``report_overflow=True`` it returns
+    ``(result, overflowed)``. ``sources`` maps
+    :data:`~repro.query.spec.KG_SOURCE` to the coded KG table."""
+    root = plan.root
+
+    def fn(sources: Mapping[str, Table]):
+        memo: Dict[Node, Table] = {}
+        flags: Optional[List[jax.Array]] = [] if report_overflow else None
+        out = execute_node(root, sources, memo, None, dedup, caps, flags)
+        if not report_overflow:
+            return out
+        over = (jnp.any(jnp.stack(flags)) if flags
+                else jnp.zeros((), dtype=bool))
+        return out, over
+
+    return jax.jit(fn) if jit else fn

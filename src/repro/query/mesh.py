@@ -1,0 +1,147 @@
+"""Fused distributed query execution: the whole BGP inside one shard_map.
+
+The mesh sibling of :func:`repro.query.compile.compile_query`, built from
+the same collective machinery as :func:`repro.plan.mesh.compile_mesh_plan`:
+the KG table arrives row-sharded over the mesh axis, σ/π/``ColEq`` run on
+the shard's block, every ⋈ moves its sides with the cost-modeled exchange
+the annotator picked (``gather`` the right side vs hash-``repartition``
+both sides on the join key), and every δ — including the root — is a
+global hash-repartition δ. Self-joins of the KG against itself work
+unchanged: both ⋈ inputs derive from the same shard-local Scan block, and
+the exchange re-co-locates rows by join key, so per-shard outputs are
+exact multiset partitions of the single-device relation.
+
+The closure returns the root still sharded (``data [n·cap_local, k]``,
+``counts [n]``) plus the any-shard overflow flag; the engine gathers the
+rows once and re-δs them canonically, exactly like ``_run_mesh`` does for
+the KG — which is what makes the mesh query result bit-identical to the
+single-device one.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.distributed import repartition_by_key, sink_bucket_cap
+from repro.plan.compile import execute_node
+from repro.plan.ir import Node
+from repro.plan.mesh import gather_table
+from repro.relalg import Table
+from repro.relalg.ops import _masked_data, dedup_rows
+
+from .lower import QueryPlan, query_scan
+
+
+def query_mesh_abstract_inputs(cap_local: int, n_shards: int, mesh=None,
+                               axis: Optional[str] = None):
+    """Abstract ``(data, counts)`` of the sharded KG table — the query
+    analogue of :func:`repro.plan.mesh.mesh_abstract_inputs` (one source,
+    5 columns), with NamedShardings when ``mesh``/``axis`` are given so
+    AOT lowering bakes the shard layout for the plan store."""
+    shard_d = shard_c = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        shard_d = NamedSharding(mesh, P(axis, None))
+        shard_c = NamedSharding(mesh, P(axis))
+    data = jax.ShapeDtypeStruct((n_shards * int(cap_local), 5), jnp.int32,
+                                sharding=shard_d)
+    counts = jax.ShapeDtypeStruct((n_shards,), jnp.int32, sharding=shard_c)
+    return data, counts
+
+
+def compile_query_mesh(plan: QueryPlan, mesh, axis: str,
+                       dedup: Optional[str] = None,
+                       caps: Optional[Mapping[Node, int]] = None,
+                       cap_local: int = 0, pack_u16: bool = False,
+                       jit: bool = True,
+                       exchanges: Optional[Mapping[Node, object]] = None,
+                       safe_exchange: bool = False):
+    """Lower a query DAG to one mesh-resident closure; returns
+    ``(run, out_cap_local)`` where ``run(data, counts) -> (out_data,
+    out_counts, overflowed)`` keeps the result sharded over ``axis``.
+
+    ``caps`` are the SHARD-LOCAL node capacities from
+    :func:`repro.query.annotate.annotate_query_local`; ``cap_local`` the
+    per-shard KG row-block capacity; ``exchanges``/``safe_exchange``
+    follow :func:`repro.plan.mesh.compile_mesh_plan` exactly (unmapped ⋈
+    gather; ``safe_exchange`` sizes every exchange bucket at the hard-safe
+    ``cap_bucket = cap_local``)."""
+    n_shards = int(mesh.shape[axis])
+    scan = query_scan(plan)
+    strategies = {node: getattr(x, "strategy", x)
+                  for node, x in (exchanges or {}).items()}
+
+    def _bucket_cap(cap: int) -> int:
+        if n_shards == 1 or safe_exchange:
+            return cap
+        return min(cap, sink_bucket_cap(cap, n_shards))
+
+    def body(data: jax.Array, counts: jax.Array):
+        sources = {scan.source: Table(data=data, count=counts.reshape(()),
+                                      attrs=scan.scan_attrs)}
+        gathered: Dict[Node, Table] = {}
+        exchanged: Dict[Tuple[Node, str], Table] = {}
+        flags = []
+
+        def exchange_table(side_node: Node, table: Table,
+                           key_attr: str) -> Table:
+            hit = exchanged.get((side_node, key_attr))
+            if hit is None:
+                d, cnt, over = repartition_by_key(
+                    _masked_data(table), table.count, axis=axis,
+                    n_shards=n_shards,
+                    cap_bucket=_bucket_cap(table.capacity),
+                    key_cols=(table.attrs.index(key_attr),),
+                    pack_u16=pack_u16)
+                flags.append(over)
+                hit = exchanged[(side_node, key_attr)] = Table(
+                    data=d, count=cnt, attrs=table.attrs)
+            return hit
+
+        def join_exchange(node: Node, left: Table, right: Table):
+            if strategies.get(node) == "repartition":
+                return (exchange_table(node.left, left, node.left_key),
+                        exchange_table(node.right, right, node.right_key))
+            hit = gathered.get(node.right)
+            if hit is None:
+                hit = gathered[node.right] = gather_table(right, axis,
+                                                          n_shards)
+            return left, hit
+
+        def distinct_global(node: Node, child: Table) -> Table:
+            d, cnt = dedup_rows(_masked_data(child), child.count, dedup)
+            if n_shards > 1:
+                d, cnt, over = repartition_by_key(
+                    d, cnt, axis=axis, n_shards=n_shards,
+                    cap_bucket=_bucket_cap(child.capacity), key_cols=None,
+                    pack_u16=pack_u16)
+                flags.append(over)
+                d, cnt = dedup_rows(d, cnt, dedup)
+            return Table(data=d, count=cnt, attrs=child.attrs)
+
+        memo: Dict[Node, Table] = {}
+        out = execute_node(plan.root, sources, memo, None, dedup, caps,
+                           flags, join_exchange=join_exchange,
+                           distinct_global=distinct_global)
+        over = (jnp.any(jnp.stack(flags)) if flags
+                else jnp.zeros((), dtype=bool))
+        return out.data, out.count.reshape(1), over.reshape(1)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis, None), P(axis)),
+                   out_specs=(P(axis, None), P(axis), P(axis)))
+
+    def run(data: jax.Array, counts: jax.Array):
+        out_data, out_counts, over = fn(data, counts)
+        return out_data, out_counts, jnp.any(over)
+
+    if jit:
+        run = jax.jit(run)
+
+    abstract = query_mesh_abstract_inputs(cap_local, n_shards)
+    out_shape = jax.eval_shape(run, *abstract)[0]
+    out_cap_local = out_shape.shape[0] // n_shards
+    return run, out_cap_local

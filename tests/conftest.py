@@ -1,7 +1,8 @@
 """Shared test configuration: hypothesis profiles.
 
 Two profiles for the property suites (``test_engine_properties.py``,
-``test_planner_properties.py``, ``test_join_exchange.py``):
+``test_planner_properties.py``, ``test_join_exchange.py``,
+``test_query_properties.py``):
 
 * ``dev`` (default) — few examples, deadline off: fast local runs.
 * ``ci``  — more examples, deadline off: selected by the CI matrix's

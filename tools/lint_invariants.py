@@ -44,6 +44,7 @@ FINGERPRINT_MODULES = (
     os.path.join(SRC, "api", "store.py"),
     os.path.join(SRC, "api", "cache.py"),
     os.path.join(SRC, "api", "engine.py"),
+    os.path.join(SRC, "query", "spec.py"),
 )
 
 #: function-name fragments that mark key/fingerprint computations
