@@ -2,7 +2,10 @@
 
 Used by every group in this package; artifacts are one JSON list of row
 dicts per group under ``experiments/bench/`` (the same rows are printed as
-CSV for eyeballing).
+CSV for eyeballing). Latency quantiles come from the repo's single
+:func:`repro.serve.stats.percentile` implementation (linear
+interpolation), re-exported here so benchmark code never re-derives index
+arithmetic.
 """
 from __future__ import annotations
 
@@ -10,6 +13,10 @@ import json
 import os
 import time
 from typing import Callable, Dict, List, Optional
+
+from repro.serve.stats import percentile
+
+__all__ = ["OUT_DIR", "percentile", "print_csv", "save_rows", "timeit"]
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                        "experiments", "bench")

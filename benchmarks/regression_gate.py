@@ -59,6 +59,10 @@ METRICS: List[Tuple[str, str, str]] = [
     # (docs/query.md — cold vs cached is gated ≥10× inside the bench; this
     # catches jitted-execution-path rot)
     ("query", "join_2hop", "queries_per_s"),
+    # sustained multi-tenant ingest through the serve front door, compile
+    # rounds excluded (docs/serve.md — compile dedup and bit-identity are
+    # hard-asserted inside the bench; this catches flush-path rot)
+    ("serve", "serve_multi_tenant", "sustained_ingests_per_s"),
 ]
 
 

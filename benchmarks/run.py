@@ -12,6 +12,9 @@
   * engine      — KGEngine sessions: cold vs cached vs ingest (docs/engine.md)
   * query       — KGQuery BGPs: cold vs cached latency, queries/s
                   (docs/query.md)
+  * serve       — multi-tenant front door: K-compiles-for-T-tenants,
+                  typed backpressure, bit-identical isolation
+                  (docs/serve.md)
   * roofline    — collated §Roofline table (from dry-run artifacts)
 
 ``--smoke`` exercises exactly one tiny cell per group (CI wiring: fast,
@@ -31,14 +34,15 @@ def main(argv=None) -> int:
                          "(1.0 = the scaled-down paper testbed)")
     ap.add_argument("--only", default="",
                     help="comma list: group_a,group_b,table1,motivating,"
-                         "dedup,partition,planner,engine,query,roofline")
+                         "dedup,partition,planner,engine,query,serve,"
+                         "roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny cell per group (CI)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from . import dedup, engine, group_a, group_b, motivating, partition, \
-        planner, query, roofline, table1
+        planner, query, roofline, serve, table1
 
     if args.smoke:
         from repro.configs.mapsdi_paper import CONFIG as PAPER
@@ -65,6 +69,7 @@ def main(argv=None) -> int:
             ("planner", lambda: planner.main(["--smoke"])),
             ("engine", lambda: engine.main(["--smoke"])),
             ("query", lambda: query.main(["--smoke"])),
+            ("serve", lambda: serve.main(["--smoke"])),
             ("roofline", lambda: roofline.main([])),
         ]
     else:
@@ -82,6 +87,7 @@ def main(argv=None) -> int:
                 ["--scale", str(args.scale)])),
             ("query", lambda: query.main(
                 ["--scale", str(args.scale)])),
+            ("serve", lambda: serve.main([])),
             ("roofline", lambda: roofline.main([])),
         ]
     for name, fn in jobs:

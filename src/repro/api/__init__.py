@@ -18,6 +18,12 @@ surface is exactly ``__all__`` below::
 historical free functions in ``repro.core.pipeline`` / ``repro.core.
 rdfizer`` are deprecated shims over this package, tagged with removal
 notes. See ``docs/engine.md`` and ``docs/query.md``.
+
+The multi-tenant streaming surface (:class:`~repro.serve.FrontDoor`,
+:class:`~repro.serve.Overloaded`, …) lives in :mod:`repro.serve` and is
+re-exported here lazily — ``repro.serve.frontdoor`` imports this package,
+so the names resolve on first attribute access (PEP 562) instead of at
+import time. See ``docs/serve.md``.
 """
 from repro.launch.mesh import Calibration
 from repro.query import Query, QueryFilter, TriplePattern
@@ -29,9 +35,27 @@ from .engine import KGEngine
 from .store import (PlanStore, default_store_root, resolve_store,
                     store_envelope, store_key)
 
+# serve-tier names resolved lazily (repro.serve.frontdoor imports this
+# package, so an eager import here would be circular)
+_SERVE_EXPORTS = (
+    "FrontDoor", "IngestResult", "Overloaded", "SessionRegistry",
+    "TenantSession", "Ticket", "percentile",
+)
+
 __all__ = [
     "CachedPlan", "Calibration", "EngineConfig", "KGEngine", "PLAN_CACHE",
     "PlanCache", "PlanStore", "Query", "QueryFilter", "TriplePattern",
     "clear_plan_cache", "default_store_root", "plan_cache_stats",
-    "resolve_store", "store_envelope", "store_key",
+    "resolve_store", "store_envelope", "store_key", *_SERVE_EXPORTS,
 ]
+
+
+def __getattr__(name: str):
+    if name in _SERVE_EXPORTS:
+        import repro.serve as _serve
+        return getattr(_serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SERVE_EXPORTS))

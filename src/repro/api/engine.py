@@ -302,6 +302,9 @@ class KGEngine:
             tuple(mesh.shape.items()), mesh_axis,
             tuple(int(d.id) for d in np.asarray(mesh.devices).flat))
         self._have_plan = False     # a closure has been obtained (any way)
+        self._builds = 0            # closures actually compiled HERE (not
+        # LRU hits, not store rehydrations) — what the serving layer's
+        # compile-dedup ratio counts across tenant sessions
         # sticky per-session escalation: once adversarial key/hash skew
         # forced a safe-capacity rebuild, later builds (e.g. after a
         # bucket-crossing ingest of the same skewed stream) start safe
@@ -337,6 +340,31 @@ class KGEngine:
     def plan(self):
         """The optimized :class:`~repro.plan.lower.LogicalPlan`."""
         return self._plan
+
+    @property
+    def plan_signature(self) -> Tuple:
+        """The session's *shape*: structural IR fingerprint × emitter
+        dictionary codes × static config signature — every plan-cache key
+        component except the (data-dependent) source/mesh capacity
+        buckets. Two sessions with equal signatures share compiled
+        closures bucket-for-bucket; the serving layer's session registry
+        (:mod:`repro.serve`) keys tenants on it to assert the
+        K-compiles-for-T-tenants dedup."""
+        return (self._ir_fp, self._emit_sig) + self.config.cache_sig()
+
+    @property
+    def builds(self) -> int:
+        """Closures compiled *by this session* (plan-cache hits and
+        plan-store rehydrations excluded) — the denominator of the serve
+        layer's compile-dedup ratio."""
+        return self._builds
+
+    @property
+    def recompiles(self) -> int:
+        """Compiles beyond the session's first (capacity-bucket crossings,
+        overflow ladders) — the serve layer's admission controller watches
+        this to detect recompile storms."""
+        return self._recompiles
 
     def explain(self) -> str:
         """Annotated plan tree over the session's current sources. On a
@@ -557,6 +585,7 @@ class KGEngine:
                 aot = False
             entry.build_seconds = time.perf_counter() - t0
         PLAN_CACHE.put(key, entry)
+        self._builds += 1
         if aot:
             self._store_save(entry, fn, abstract)
         if self._have_plan:
@@ -995,6 +1024,7 @@ class KGEngine:
                 aot = False
             entry.build_seconds = time.perf_counter() - t0
         PLAN_CACHE.put(key, entry)
+        self._builds += 1
         if aot:
             self._store_save(entry, fn, abstract)
         return entry
@@ -1282,6 +1312,7 @@ class KGEngine:
             }),
             "executions": self._executions, "ingests": self._ingests,
             "ingested_rows": self._ingested_rows,
+            "builds": self._builds,
             "recompiles": self._recompiles,
             "plan_cache_hits": self._cache_hits,
             "plan_cache_misses": self._cache_misses,

@@ -236,7 +236,8 @@ def pack_entry_meta(entry, plan) -> Dict[str, object]:
             [index[n], x.strategy, int(x.gather_bytes),
              int(x.repartition_bytes), float(x.gather_seconds),
              float(x.repartition_seconds),
-             getattr(x, "cost_source", "static")]
+             getattr(x, "cost_source", "static"),
+             int(getattr(x, "parent_fanout", 1))]
             for n, x in (entry.exchanges or {}).items())
     return meta
 
@@ -263,13 +264,18 @@ def unpack_entry_meta(meta: Mapping[str, object], plan) -> Dict[str, object]:
         out["out_cap_local"] = int(meta["out_cap_local"])
         out["sink_slack"] = float(meta["sink_slack"])
         out["safe_exchange"] = bool(meta["safe_exchange"])
+        # pre-fanout entries carry 7 fields; parent_fanout defaults to 1
+        # (same format version — the amortization changed pricing, not the
+        # envelope)
         out["exchanges"] = {
             order[i]: JoinExchange(strategy=s, gather_bytes=int(gb),
                                    repartition_bytes=int(rb),
                                    gather_seconds=float(gs),
                                    repartition_seconds=float(rs),
-                                   cost_source=str(src))
-            for i, s, gb, rb, gs, rs, src in meta.get("exchanges", [])}
+                                   cost_source=str(src),
+                                   parent_fanout=int(rest[0]) if rest else 1)
+            for i, s, gb, rb, gs, rs, src, *rest
+            in meta.get("exchanges", [])}
     return out
 
 
@@ -446,14 +452,25 @@ class PlanStore:
                 os.close(lock_fd)   # closing drops the flock
 
     def _prune(self) -> None:
-        entries = sorted(
-            (p for p in self._entry_files()),
-            key=lambda p: os.path.getmtime(p))
-        for path in entries[:max(0, len(entries) - self.max_entries)]:
+        """Drop the oldest entries beyond ``max_entries`` — tolerant of
+        concurrent stores (the serving norm): an entry vanishing or being
+        replaced between the listing and the mtime read is skipped and
+        counted under ``write_errors`` (the store's NEVER-raises contract
+        covers pruning too), and the unlink itself is missing-ok."""
+        stamped = []
+        for path in self._entry_files():
+            try:
+                stamped.append((os.path.getmtime(path), path))
+            except OSError:      # pruned/replaced behind our back
+                self.write_errors += 1
+        stamped.sort()
+        for _, path in stamped[:max(0, len(stamped) - self.max_entries)]:
             try:
                 os.unlink(path)
-            except OSError:
+            except FileNotFoundError:   # a concurrent pruner won the race
                 pass
+            except OSError:
+                self.write_errors += 1
 
     # -- introspection -------------------------------------------------------
     def _entry_files(self) -> List[str]:
@@ -468,9 +485,14 @@ class PlanStore:
 
     def stats(self) -> Dict[str, object]:
         files = self._entry_files()
+        size = 0
+        for p in files:     # same listing/stat race discipline as _prune
+            try:
+                size += os.path.getsize(p)
+            except OSError:
+                pass
         return {"root": self.root, "entries": len(files),
-                "bytes": sum(os.path.getsize(p) for p in files
-                             if os.path.exists(p)),
+                "bytes": size,
                 "hits": self.hits, "misses": self.misses,
                 "rejects": self.rejects, "writes": self.writes,
                 "write_errors": self.write_errors,

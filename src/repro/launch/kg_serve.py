@@ -1,39 +1,54 @@
-"""Streaming KG ingestion driver: micro-batches through one KGEngine session.
+"""Multi-tenant streaming KG ingestion driver over the serve front door.
 
-Simulates the production semantification loop at CPU scale: a seed
-group-B DIS is planned once into a ``KGEngine`` session, then extension
-micro-batches (new gene/sample rows) arrive and are folded in via
-``engine.ingest`` — the session reuses its cached compiled plan inside a
-capacity bucket and transparently recompiles (counted) when the stream
-outgrows it. Reports per-batch latency, cumulative triples, recompile and
-plan-cache counters. With ``--mesh-shards N`` the sink duplicate
-elimination runs through the shard_map collective path (requires N local
-devices, e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+Simulates the production semantification service at CPU scale: T tenant
+DISes spread over K structural shapes register with one
+:class:`~repro.serve.FrontDoor`, then extension micro-batches (new
+gene/sample rows) stream in round-robin and are folded into each tenant's
+KG via the shared-plan ingest path — tenants of one shape share compiled
+closures through the process-wide plan cache (K compiles for T tenants),
+and the admission controller sheds load with typed ``Overloaded``
+responses when the queue passes its watermarks. Reports per-request
+latency quantiles (linear-interpolation percentiles — the shared
+:func:`repro.serve.percentile` helper, NOT index arithmetic), compile
+dedup, recompile stalls and shed counts from ``serve_stats()``.
+
+With ``--mesh-shards N`` every tenant's sink duplicate elimination runs
+through the shard_map collective path (requires N local devices, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``). ``--tenants 1
+--shapes 1`` recovers the historical single-session behaviour.
 
 Usage::
 
-    PYTHONPATH=src python -m repro.launch.kg_serve --rows 4000 \
-        --batches 16 --batch-rows 256
-    PYTHONPATH=src python -m repro.launch.serve --kg --rows 4000 ...
+    PYTHONPATH=src python -m repro.launch.kg_serve --rows 2000 \
+        --tenants 8 --shapes 2 --batches 12 --batch-rows 128
+    PYTHONPATH=src python -m repro.launch.serve --kg --rows 2000 ...
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List
 
-from repro.api import EngineConfig, KGEngine
+from repro.api import EngineConfig
 from repro.data.synthetic import (make_group_b_dis,
                                   make_group_b_extension_records)
-from repro.relalg import Table
+from repro.serve import FrontDoor, Overloaded, percentile
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=4000,
                     help="seed rows per source")
-    ap.add_argument("--batches", type=int, default=16)
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="registered tenant sessions")
+    ap.add_argument("--shapes", type=int, default=2,
+                    help="distinct structural DIS shapes among tenants")
+    ap.add_argument("--batches", type=int, default=16,
+                    help="ingest micro-batches per tenant")
     ap.add_argument("--batch-rows", type=int, default=256)
+    ap.add_argument("--flush-window", type=float, default=0.0,
+                    help="micro-batch coalescing window in seconds")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission hard high-water (queued requests)")
     ap.add_argument("--engine", default="sdm")
     ap.add_argument("--dedup", default="hash")
     ap.add_argument("--mode", default="exact", choices=["exact", "bound"])
@@ -42,48 +57,63 @@ def main(argv=None) -> int:
                     help="shard the sink δ over N devices (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if not 1 <= args.shapes <= args.tenants:
+        ap.error("--shapes must be in [1, --tenants]")
 
     mesh = None
     if args.mesh_shards:
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((args.mesh_shards,), ("data",))
 
-    dis = make_group_b_dis(args.rows, 0.6, seed=args.seed)
+    door = FrontDoor(EngineConfig(engine=args.engine, dedup=args.dedup,
+                                  mode=args.mode, slack=args.slack,
+                                  mesh=mesh),
+                     flush_window=args.flush_window,
+                     max_queue=args.max_queue)
     t0 = time.perf_counter()
-    engine = KGEngine(dis, config=EngineConfig(
-        engine=args.engine, dedup=args.dedup, mode=args.mode,
-        slack=args.slack, mesh=mesh))
-    kg, stats = engine.create_kg()
-    print(f"seed: {stats['kg_triples']} triples in "
-          f"{time.perf_counter() - t0:.2f}s "
-          f"(plan cache hit={stats['plan_cache_hit']})")
+    for t in range(args.tenants):
+        # tenants of one shape share seed rows (identical structure +
+        # dictionary codes → identical plan signature → one compile);
+        # their live deltas below still differ per tenant
+        shape = t % args.shapes
+        dis = make_group_b_dis(args.rows, 0.6, seed=args.seed + shape)
+        door.register(f"tenant{t}", dis)
+    dedup = door.registry.compile_dedup()
+    print(f"registered {dedup['tenants']} tenants over {dedup['shapes']} "
+          f"shapes in {time.perf_counter() - t0:.2f}s")
 
-    latencies: List[float] = []
-    ingested = 0
+    shed = 0
+    tickets = []
     for b in range(args.batches):
-        recs = make_group_b_extension_records(args.batch_rows, seed=1000 + b)
-        deltas = {name: Table.from_records(r, engine.sources[name].attrs,
-                                           engine.vocab)
-                  for name, r in recs.items()}
-        t0 = time.perf_counter()
-        kg, stats = engine.ingest(deltas)
-        latencies.append(time.perf_counter() - t0)
-        ingested += 2 * args.batch_rows
-        print(f"batch {b:3d}: {stats['kg_triples']} triples "
-              f"{latencies[-1] * 1e3:7.1f}ms "
-              f"recompiles={stats['recompiles']} "
-              f"cache_hit={stats['plan_cache_hit']}")
+        for t in range(args.tenants):
+            recs = make_group_b_extension_records(
+                args.batch_rows, seed=1000 + b * args.tenants + t)
+            resp = door.submit(f"tenant{t}", recs)
+            if isinstance(resp, Overloaded):
+                shed += 1
+                continue
+            tickets.append(resp)
+        flushed = door.pump(force=args.flush_window == 0.0)
+        if flushed:
+            last = tickets[-1].result(timeout=600)
+            print(f"batch {b:3d}: tenant kg={last.kg_triples} triples "
+                  f"{last.ingest_s * 1e3:7.1f}ms "
+                  f"coalesced={last.batched_requests} "
+                  f"recompiles={last.recompiles}")
+    door.drain()
 
-    lat = sorted(latencies)
-    st = engine.stats()
-    print(f"\ningested {ingested} rows over {args.batches} batches: "
-          f"p50={lat[len(lat) // 2] * 1e3:.1f}ms "
-          f"p99={lat[min(len(lat) - 1, int(len(lat) * 0.99))] * 1e3:.1f}ms "
-          f"steady={int(st['source_buckets']['gene'])}-row gene bucket")
-    print(f"recompiles={st['recompiles']} "
-          f"plan_cache_hits={st['plan_cache_hits']} "
-          f"misses={st['plan_cache_misses']} "
-          f"kg_triples={stats['kg_triples']}")
+    st = door.serve_stats()
+    lat = [tk.result(timeout=600).latency_s for tk in tickets]
+    print(f"\ningested {sum(s['rows'] for s in st['per_tenant'].values())} "
+          f"rows over {st['flushes']} flushes "
+          f"({st['completed']} requests, {shed} shed): "
+          f"p50={percentile(lat, 50) * 1e3:.1f}ms "
+          f"p99={percentile(lat, 99) * 1e3:.1f}ms")
+    print(f"compiles={st['compiles']} for {st['tenants']} tenants "
+          f"(dedup ratio {st['compile_dedup_ratio']:.1f}x) "
+          f"recompile_stalls={st['recompile_stalls']} "
+          f"plan_cache_hits={st['plan_cache']['hits']} "
+          f"sheds={st['admission']['sheds']}")
     return 0
 
 

@@ -83,6 +83,14 @@ class JoinExchange:
     :func:`join_exchange_cost` / ``annotate_local``, consumed by
     :func:`repro.plan.mesh.compile_mesh_plan` and rendered by
     ``explain``/``dump_plan``.
+
+    ``parent_fanout`` is the number of ⋈ sites sharing this join's parent
+    node. The fused mesh closure all_gathers a parent ONCE and reuses the
+    replica at every ⋈ on the same parent (``compile_mesh_plan`` memoizes
+    per parent node), so the gather figures here are the per-⋈ AMORTIZED
+    share — total gather cost ÷ fanout — and the total is recovered as
+    ``gather_seconds · parent_fanout``. ``repartition_*`` stay per-⋈ (each
+    ⋈'s child side is its own exchange).
     """
 
     strategy: str               # "gather" | "repartition"
@@ -91,13 +99,15 @@ class JoinExchange:
     gather_seconds: float
     repartition_seconds: float
     cost_source: str = "static"  # "static" | "measured" bandwidth numbers
+    parent_fanout: int = 1       # ⋈ sites sharing the gathered parent
 
 
 def join_exchange_cost(child_cap_local: int, child_cols: int,
                        parent_cap_local: int, parent_cols: int,
                        n_shards: int, strategy: str = "auto",
                        word_bytes: int = 4,
-                       calibration=None) -> JoinExchange:
+                       calibration=None,
+                       parent_fanout: int = 1) -> JoinExchange:
     """Price the two ⋈ exchange strategies and pick one.
 
     Inputs are the SHARD-LOCAL buffer capacities (rows) and widths
@@ -127,6 +137,17 @@ def join_exchange_cost(child_cap_local: int, child_cols: int,
     ``"repartition"``) or lets the model decide (``"auto"``); one shard
     always gathers under ``"auto"`` (both strategies are the identity, the
     gather plan is the cheaper program).
+
+    ``parent_fanout`` > 1 declares that this many ⋈ sites share the parent
+    node: the runtime all_gather is memoized per parent
+    (``compile_mesh_plan`` gathers once, every sharing ⋈ reuses the
+    replica), so the gather bytes/seconds — wire time AND the one launch —
+    are amortized over the fan-out before the ``"auto"`` comparison.
+    Without the amortization a parent gathered once was billed
+    ``parent_fanout`` times, flipping ``auto`` to ``repartition`` on plans
+    where the shared gather is actually cheaper (each sharing ⋈ would pay
+    its own child+parent repartition). ``repartition_*`` are never
+    amortized (each ⋈'s exchange buckets are its own collectives).
     """
     from repro.core.distributed import sink_bucket_cap
     from repro.launch.mesh import ICI_BW
@@ -147,11 +168,15 @@ def join_exchange_cost(child_cap_local: int, child_cols: int,
     def bucket(cap_local: int) -> int:
         return min(int(cap_local), sink_bucket_cap(int(cap_local), n))
 
-    gather_bytes = (n - 1) * int(parent_cap_local) * parent_cols * word_bytes
+    fanout = max(1, int(parent_fanout))
+    gather_total = (n - 1) * int(parent_cap_local) * parent_cols * word_bytes
+    # the amortized per-⋈ share of the one shared all_gather (ceil so the
+    # shares still sum to at least the total)
+    gather_bytes = -(-gather_total // fanout)
     rep_rows = (bucket(child_cap_local) * child_cols
                 + bucket(parent_cap_local) * parent_cols)
     repartition_bytes = (n - 1) * rep_rows * word_bytes
-    gather_s = gather_bytes / gather_bw + 1 * launch_s
+    gather_s = (gather_total / gather_bw + 1 * launch_s) / fanout
     repartition_s = repartition_bytes / a2a_bw + 2 * launch_s
     if strategy == "auto":
         strategy = ("repartition" if n > 1 and repartition_s < gather_s
@@ -160,7 +185,21 @@ def join_exchange_cost(child_cap_local: int, child_cols: int,
                         repartition_bytes=repartition_bytes,
                         gather_seconds=gather_s,
                         repartition_seconds=repartition_s,
-                        cost_source=cost_source)
+                        cost_source=cost_source,
+                        parent_fanout=fanout)
+
+
+def parent_fanouts(joins) -> Dict[Node, int]:
+    """How many ⋈ sites share each parent node — the amortization divisor
+    :func:`join_exchange_cost` prices the shared all_gather with. Keyed by
+    the parent node itself (structural hash), exactly the key
+    ``compile_mesh_plan`` memoizes the gathered replica under, so the
+    pricing groups precisely the joins the runtime lets share one
+    collective."""
+    fanout: Dict[Node, int] = {}
+    for join in joins:
+        fanout[join.right] = fanout.get(join.right, 0) + 1
+    return fanout
 
 
 def _eval_rows(node: Node, sources: Mapping[str, Table],
@@ -344,7 +383,12 @@ def annotate_local(plan: LogicalPlan, n_shards: int,
       (``"gather"`` | ``"repartition"`` | ``"auto"``), priced from the
       already-computed shard-local caps of the child and parent relations —
       under the static datasheet constants, or under a measured
-      :class:`repro.launch.mesh.Calibration` when one is passed.
+      :class:`repro.launch.mesh.Calibration` when one is passed. Joins
+      sharing one parent node (CSE-shared subplans) share one runtime
+      all_gather, so each ⋈'s gather price is the amortized
+      total-÷-fan-out share (:func:`parent_fanouts`) — per-⋈ pricing in
+      isolation would bill the shared collective once per ⋈ and flip
+      ``auto`` to ``repartition`` on plans where the shared gather wins.
 
     **Post-exchange bounds.** The mesh executes every interior δ as a
     global hash-repartition (all copies of a row share its rowhash, so a
@@ -407,12 +451,14 @@ def annotate_local(plan: LogicalPlan, n_shards: int,
         caps[node] = cap_fn(int(math.ceil(min(c, local_bound(node))
                                           * slack)))
     exchanges: Dict[Node, JoinExchange] = {}
+    fanout = parent_fanouts(joins)
     for node in joins:
         c = counts[node]
         exch = join_exchange_cost(
             caps[node.left], len(node.left.attrs),
             caps[node.right], len(node.right.attrs),
-            n_shards, strategy=join_exchange, calibration=calibration)
+            n_shards, strategy=join_exchange, calibration=calibration,
+            parent_fanout=fanout[node.right])
         exchanges[node] = exch
         if exch.strategy == "repartition":
             local = c if safe_exchange else poisson_shard_bound(c, n_shards)

@@ -99,8 +99,13 @@ def dump_root(root: Node,
             bits.append(f"cap={caps[node]}")
         exch = exchanges.get(node)
         if exch is not None:
+            fanout = getattr(exch, "parent_fanout", 1)
             bits.append(f"exchange={exch.strategy}")
-            bits.append(f"gather≈{_fmt_bytes(exch.gather_bytes)}")
+            # gather_bytes is the amortized per-⋈ share of the one shared
+            # all_gather when several ⋈ reuse this parent's replica
+            bits.append(f"gather≈{_fmt_bytes(exch.gather_bytes)}"
+                        + (f" (÷{fanout} shared parent)" if fanout > 1
+                           else ""))
             bits.append(f"all_to_all≈{_fmt_bytes(exch.repartition_bytes)}")
             bits.append(f"cost={getattr(exch, 'cost_source', 'static')}")
         return ("  [" + ", ".join(bits) + "]") if bits else ""

@@ -15,7 +15,8 @@ import math
 from typing import Callable, Dict, Mapping, Optional, Tuple
 
 from repro.plan.annotate import (JoinExchange, _bound, _eval_rows,
-                                 join_exchange_cost, poisson_shard_bound)
+                                 join_exchange_cost, parent_fanouts,
+                                 poisson_shard_bound)
 from repro.plan.ir import (ColEq, Distinct, EquiJoin, Node, Project, Scan,
                            Select, Union, node_order)
 from repro.relalg.table import Table, round_cap
@@ -78,6 +79,10 @@ def annotate_query_local(plan: QueryPlan, n_shards: int,
     locals_: Dict[Node, int] = {}
     caps: Dict[Node, int] = {}
     exchanges: Dict[Node, JoinExchange] = {}
+    # gather amortization divisor per shared parent (BGP joins habitually
+    # share the KG-pattern parent) — same grouping as the creation path
+    fanout = parent_fanouts(n for n in node_order([plan.root])
+                            if isinstance(n, EquiJoin))
     for node in node_order([plan.root]):    # post-order: children first
         c = counts[node]
         if isinstance(node, Scan):
@@ -94,7 +99,8 @@ def annotate_query_local(plan: QueryPlan, n_shards: int,
             exch = join_exchange_cost(
                 caps[node.left], len(node.left.attrs),
                 caps[node.right], len(node.right.attrs),
-                n_shards, strategy=join_exchange, calibration=calibration)
+                n_shards, strategy=join_exchange, calibration=calibration,
+                parent_fanout=fanout[node.right])
             exchanges[node] = exch
             if exch.strategy == "repartition":
                 local = (c if safe_exchange

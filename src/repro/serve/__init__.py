@@ -1,3 +1,23 @@
-from .decode import make_prefill, make_serve_step, greedy_generate
+"""Serving tier: token-decode loops AND the multi-tenant ingest front
+door (``docs/serve.md``).
 
-__all__ = ["make_prefill", "make_serve_step", "greedy_generate"]
+The decode helpers (:func:`make_prefill` & co.) predate the front door
+and keep their import path. The streaming-service surface is
+:class:`FrontDoor` plus its typed request/response vocabulary; everything
+here re-exports from :mod:`repro.api` as well for the one-stop stable
+surface.
+"""
+from .admission import (AdmissionController, IngestResult, Overloaded,
+                        Ticket)
+from .batcher import MicroBatcher, PendingRequest
+from .decode import greedy_generate, make_prefill, make_serve_step
+from .frontdoor import FrontDoor
+from .registry import SessionRegistry, TenantSession
+from .stats import LatencyWindow, percentile
+
+__all__ = [
+    "AdmissionController", "FrontDoor", "IngestResult", "LatencyWindow",
+    "MicroBatcher", "Overloaded", "PendingRequest", "SessionRegistry",
+    "TenantSession", "Ticket", "greedy_generate", "make_prefill",
+    "make_serve_step", "percentile",
+]

@@ -316,3 +316,154 @@ print("OK")
     assert out.returncode == 0, \
         f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
     assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# shared-parent fan-out: the amortized gather pricing
+# ---------------------------------------------------------------------------
+
+def _shared_parent_spec(fanout, n_child, n_parent, n_keys=8, seed=3):
+    """``fanout`` child maps all joining ONE parent map — the runtime
+    gathers that parent once (``compile_mesh_plan`` memoizes per parent
+    node), so the cost model must amortize the gather over the fan-out."""
+    rng = np.random.default_rng(seed)
+    keys = [f"K{i}" for i in range(n_keys)]
+    parent = [{"ID": int(i), "k": keys[rng.integers(0, n_keys)],
+               "p": f"p{i}"} for i in range(n_parent)]
+    spec = {
+        "sources": {"parent": {"attrs": ["ID", "k", "p"],
+                               "records": parent}},
+        "maps": [
+            {"name": "M2", "source": "parent",
+             "subject": {"template": "http://ex/P/{p}", "class": "ex:P"},
+             "poms": [{"predicate": "ex:key",
+                       "object": {"reference": "k"}}]}],
+    }
+    for f in range(fanout):
+        child = [{"ID": int(i), "k": keys[rng.integers(0, n_keys)],
+                  "v": f"v{f}_{i}"} for i in range(n_child)]
+        spec["sources"][f"child{f}"] = {"attrs": ["ID", "k", "v"],
+                                        "records": child}
+        spec["maps"].append(
+            {"name": f"M1_{f}", "source": f"child{f}",
+             "subject": {"template": "http://ex/C/{v}", "class": "ex:C"},
+             "poms": [
+                 {"predicate": "ex:val", "object": {"reference": "v"}},
+                 {"predicate": "ex:rel",
+                  "object": {"parentTriplesMap": "M2",
+                             "joinCondition": {"child": "k",
+                                               "parent": "k"}}}]})
+    return spec
+
+
+def test_cost_model_amortizes_shared_parent_gather():
+    # caps where per-join pricing flips to repartition but the amortized
+    # shared gather is cheaper (verified analytically: the one all_gather
+    # serves all 6 sites; 6 repartitions each pay their own collectives)
+    per = join_exchange_cost(512, 3, 4096, 3, n_shards=8, strategy="auto")
+    assert per.strategy == "repartition" and per.parent_fanout == 1
+    amortized = join_exchange_cost(512, 3, 4096, 3, n_shards=8,
+                                   strategy="auto", parent_fanout=6)
+    assert amortized.strategy == "gather"
+    assert amortized.parent_fanout == 6
+    # the amortized share: ceil(total / fanout) bytes, seconds / fanout
+    assert amortized.gather_bytes == -(-per.gather_bytes // 6)
+    assert amortized.gather_seconds == pytest.approx(per.gather_seconds / 6)
+    # repartition is per-⋈ (own collectives) — never amortized
+    assert amortized.repartition_bytes == per.repartition_bytes
+    assert amortized.repartition_seconds == per.repartition_seconds
+    # fanout=1 degenerates to the historical pricing exactly
+    assert join_exchange_cost(512, 3, 4096, 3, n_shards=8,
+                              strategy="auto", parent_fanout=1) == per
+
+
+def test_parent_fanouts_groups_joins_by_parent_node():
+    from repro.plan.annotate import parent_fanouts
+    from repro.plan.ir import node_order
+    eng = KGEngine(parse_dis(_shared_parent_spec(3, 12, 20)))
+    joins = [n for n in node_order(eng.plan.emits())
+             if isinstance(n, EquiJoin)]
+    assert len(joins) == 3
+    fanout = parent_fanouts(joins)
+    assert set(fanout.values()) == {3}          # one shared parent node
+    assert len(fanout) == 1
+    # joins on DISTINCT parents keep fanout 1 each
+    base = _join_spec(*_random_records(8, 8, 3, seed=5))
+    solo = [n for n in node_order(
+        KGEngine(parse_dis(base)).plan.emits()) if isinstance(n, EquiJoin)]
+    assert list(parent_fanouts(solo).values()) == [1]
+
+
+def test_annotate_local_prices_shared_parent_amortized():
+    """End to end through ``annotate_local``: a 6-way shared parent large
+    enough that per-⋈ pricing would pick repartition, amortized pricing
+    keeps the (actually cheaper) shared gather — and ``explain()`` shows
+    the amortized bytes with the fan-out."""
+    from repro.plan.annotate import annotate_local
+    from repro.plan.mesh import plan_scans
+    from repro.relalg.table import bucket_cap
+    eng = KGEngine(parse_dis(_shared_parent_spec(6, 40, 30000)))
+    plan = eng.plan
+    n = 8
+    cap_locals = {name: bucket_cap(-(-plan.dis.sources[name].capacity // n))
+                  for name in plan_scans(plan)}
+    _counts, _caps, exchanges = annotate_local(
+        plan, n, cap_locals, join_exchange="auto")
+    shared = [x for x in exchanges.values() if x.parent_fanout > 1]
+    assert len(shared) == 6
+    for x in shared:
+        assert x.parent_fanout == 6
+        # the flip: unamortized gather seconds would lose to repartition,
+        # the amortized share wins
+        assert x.gather_seconds * x.parent_fanout > x.repartition_seconds
+        assert x.strategy == "gather"
+        assert x.gather_seconds < x.repartition_seconds
+    text = explain(plan, "sdm", n_shards=n, join_exchange="auto")
+    assert "÷6 shared parent" in text, text
+
+
+def test_exchange_meta_round_trips_parent_fanout():
+    from repro.api.store import pack_entry_meta, unpack_entry_meta
+    from repro.plan.annotate import annotate_local
+    from repro.plan.mesh import plan_scans
+    from repro.relalg.table import bucket_cap
+
+    class _Entry:       # the CachedPlan fields pack_entry_meta reads
+        pass
+
+    eng = KGEngine(parse_dis(_shared_parent_spec(3, 12, 20)))
+    plan = eng.plan
+    cap_locals = {name: bucket_cap(-(-plan.dis.sources[name].capacity
+                                     // 4))
+                  for name in plan_scans(plan)}
+    counts, caps, exchanges = annotate_local(plan, 4, cap_locals,
+                                             join_exchange="auto")
+    e = _Entry()
+    e.engine, e.dedup, e.mode = "sdm", "hash", "exact"
+    e.build_seconds, e.counts, e.caps = 0.1, counts, caps
+    e.cap_locals, e.out_cap_local = cap_locals, 64
+    e.sink_slack, e.safe_exchange, e.exchanges = 1.0, False, exchanges
+    meta = pack_entry_meta(e, plan)
+    assert all(len(row) == 8 for row in meta["exchanges"])
+    out = unpack_entry_meta(meta, plan)
+    assert out["exchanges"] == exchanges        # fanout survives the trip
+    # pre-fanout 7-field rows (older processes) load with fanout = 1
+    legacy = dict(meta)
+    legacy["exchanges"] = [row[:7] for row in meta["exchanges"]]
+    old = unpack_entry_meta(legacy, plan)
+    assert all(x.parent_fanout == 1 for x in old["exchanges"].values())
+    assert {n: x.strategy for n, x in old["exchanges"].items()} == \
+        {n: x.strategy for n, x in exchanges.items()}
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_shared_parent_bit_identical_across_strategies(strategy):
+    """Whatever the (now amortized) cost model decides, the answer must
+    not move: the shared-parent plan's mesh KG equals the single-device
+    planned KG bit for bit under every forced strategy AND auto."""
+    spec = _shared_parent_spec(3, 12, 20, seed=9)
+    kg_single, st_single = KGEngine(parse_dis(spec)).create_kg()
+    eng = KGEngine(parse_dis(spec), mesh=_mesh(), join_exchange=strategy)
+    kg_mesh, st_mesh = eng.create_kg()
+    np.testing.assert_array_equal(kg_mesh.to_codes(), kg_single.to_codes())
+    assert st_mesh["raw_triples"] == st_single["raw_triples"]

@@ -412,3 +412,72 @@ def test_ci_prepopulated_store_serves_every_config(engine, dedup, mesh):
     acc.sources = dict(session.sources)
     kg_ref, _ = RDFizer(acc, engine, dedup=dedup)()
     np.testing.assert_array_equal(kg.to_codes(), kg_ref.to_codes())
+
+
+def test_prune_tolerates_concurrent_deletion(tmp_path, monkeypatch):
+    """Entries vanishing between the listing and the mtime read (a
+    concurrent pruner or writer replacing them — the serving norm) must
+    not raise out of ``_prune``: vanished files are skipped and counted
+    under ``write_errors``, and losing the unlink race is free."""
+    store = PlanStore(str(tmp_path), max_entries=1)
+    env = store_envelope()
+    for i in range(4):
+        key = f"{i:02d}" * 32
+        assert store.save(key, env, {"i": i}, {NATIVE: b"z"})
+        os.utime(store.entry_path(key), (i, i))
+    assert len(store) == 1                      # pruned down on each save
+
+    # repopulate without pruning interference, then race the snapshot:
+    # the first getmtime call sees its file deleted under it
+    store.max_entries = 100
+    for i in range(4, 7):
+        key = f"{i:02d}" * 32
+        assert store.save(key, env, {"i": i}, {NATIVE: b"z"})
+        os.utime(store.entry_path(key), (i, i))
+    real_getmtime = os.path.getmtime
+    vanished = []
+
+    def racing_getmtime(path):
+        if not vanished:
+            vanished.append(path)
+            os.unlink(path)                     # the concurrent pruner
+        return real_getmtime(path)              # raises for the victim
+
+    monkeypatch.setattr(os.path, "getmtime", racing_getmtime)
+    store.max_entries = 1
+    errors_before = store.write_errors
+    store._prune()                              # must not raise
+    monkeypatch.undo()
+    assert store.write_errors == errors_before + 1
+    assert len(store) == 1                      # still pruned to the cap
+
+    # losing the unlink race itself is silent (missing-ok semantics)
+    key = "aa" * 32
+    assert store.save(key, env, {"i": 99}, {NATIVE: b"z"})
+    real_unlink = os.unlink
+
+    def racing_unlink(path, *a, **kw):
+        real_unlink(path, *a, **kw)
+        raise FileNotFoundError(path)           # loser's view of the race
+
+    monkeypatch.setattr(os, "unlink", racing_unlink)
+    errors_before = store.write_errors
+    store._prune()                              # must not raise
+    monkeypatch.undo()
+    assert store.write_errors == errors_before  # not an error
+
+
+def test_stats_tolerates_vanishing_entries(tmp_path, monkeypatch):
+    store = PlanStore(str(tmp_path))
+    env = store_envelope()
+    assert store.save("bb" * 32, env, {}, {NATIVE: b"z"})
+    real_getsize = os.path.getsize
+
+    def racing_getsize(path):
+        if path.endswith(".plan"):
+            raise FileNotFoundError(path)
+        return real_getsize(path)
+
+    monkeypatch.setattr(os.path, "getsize", racing_getsize)
+    st = store.stats()                          # must not raise
+    assert st["entries"] == 1 and st["bytes"] == 0

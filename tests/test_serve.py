@@ -1,0 +1,342 @@
+"""Serve-tier tests: percentiles, batching, admission, the front door.
+
+Covers the three serving claims end to end at test scale (the full-size
+versions gate in ``benchmarks/serve.py --smoke``):
+
+* latency quantiles are linear-interpolation percentiles — regression
+  for the historical ``int(n * 0.99)`` index arithmetic whose "p99" was
+  the sample max for every N ≤ 100 (``repro.launch.kg_serve``);
+* T tenants over K structural shapes cost exactly K compiles;
+* admission never drops silently — every submit yields a Ticket or a
+  typed ``Overloaded``, and stop paths fail tickets loudly;
+* a multiplexed tenant's KG is bit-identical to a dedicated session.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import EngineConfig, KGEngine, clear_plan_cache
+from repro.data.synthetic import (make_group_b_dis,
+                                  make_group_b_extension_records)
+from repro.relalg import Table, host_int
+from repro.serve import (AdmissionController, FrontDoor, IngestResult,
+                         LatencyWindow, MicroBatcher, Overloaded,
+                         SessionRegistry, Ticket, percentile)
+
+CONFIG = EngineConfig(engine="sdm", dedup="hash")
+
+
+def _dis(shape=0, rows=24):
+    return make_group_b_dis(rows, 0.5, seed=40 + shape)
+
+
+def _recs(n=2, seed=0):
+    return make_group_b_extension_records(n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# percentile: the shared quantile helper
+
+
+def test_percentile_matches_numpy():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 10, 100, 101, 997):
+        vals = rng.exponential(size=n).tolist()
+        for q in (0, 25, 50, 75, 90, 99, 99.9, 100):
+            assert percentile(vals, q) == pytest.approx(
+                float(np.percentile(vals, q)), rel=1e-12)
+
+
+def test_percentile_interpolates_not_max():
+    # the historical int(n * 0.99) index returned the MAX for any n <= 100
+    vals = list(range(1, 11))     # 1..10
+    assert percentile(vals, 99) < 10
+    assert percentile(vals, 99) == pytest.approx(9.91)
+    # even-N median interpolates instead of picking the upper sample
+    assert percentile([1.0, 2.0], 50) == pytest.approx(1.5)
+
+
+def test_percentile_rejects_bad_input():
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 50)
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        percentile([1.0], 101)
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        percentile([1.0], -1)
+
+
+def test_latency_window_bounds_and_snapshot():
+    w = LatencyWindow(maxlen=4)
+    assert w.snapshot() == {"count": 0, "total": 0, "p50_s": 0.0,
+                            "p99_s": 0.0, "max_s": 0.0}
+    w.extend([1.0, 2.0, 3.0, 4.0, 5.0])
+    snap = w.snapshot()
+    assert snap["count"] == 4 and snap["total"] == 5   # ring dropped 1.0
+    assert snap["max_s"] == 5.0
+    assert snap["p50_s"] == pytest.approx(
+        float(np.percentile([2, 3, 4, 5], 50)))
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+
+
+def _ticket(t=0.0, tenant="t"):
+    tk = Ticket(tenant, enqueued_at=t)
+    return tk
+
+
+def test_batcher_coalesces_in_arrival_order():
+    clock = [0.0]
+    b = MicroBatcher(flush_window=1.0, clock=lambda: clock[0])
+    b.add("a", {"gene": [{"x": 1}], "chrom": [{"y": 1}]}, _ticket(0.0))
+    b.add("a", {"gene": [{"x": 2}]}, _ticket(0.0))
+    assert b.depth() == 2 and b.depth("a") == 2 and b.depth("b") == 0
+    assert b.due() == []                       # window not elapsed
+    clock[0] = 1.5
+    assert b.due() == ["a"]
+    taken, merged = b.pop_batch("a")
+    assert [r.rows for r in taken] == [2, 1]
+    assert merged == {"gene": [{"x": 1}, {"x": 2}], "chrom": [{"y": 1}]}
+    assert b.depth() == 0 and b.pop_batch("a") == ([], {})
+
+
+def test_batcher_row_cap_splits_batches_but_never_starves():
+    b = MicroBatcher(flush_window=0.0, max_batch_rows=3)
+    big = {"gene": [{"x": i} for i in range(5)]}    # 5 rows > cap alone
+    b.add("a", big, _ticket())
+    b.add("a", {"gene": [{"x": 9}]}, _ticket())
+    assert b.due(force=True) == ["a"]
+    taken, _ = b.pop_batch("a")
+    assert len(taken) == 1          # oversize request flushes alone
+    taken, _ = b.pop_batch("a")
+    assert len(taken) == 1
+    # rows >= max_batch_rows makes a tenant due regardless of the window
+    b2 = MicroBatcher(flush_window=999.0, max_batch_rows=2, clock=lambda: 0)
+    b2.add("a", big, _ticket())
+    assert b2.due() == ["a"]
+
+
+def test_batcher_next_deadline_and_drain():
+    clock = [10.0]
+    b = MicroBatcher(flush_window=2.0, clock=lambda: clock[0])
+    assert b.next_deadline() is None
+    b.add("a", {"gene": [{}]}, _ticket(10.0))
+    clock[0] = 10.5
+    assert b.next_deadline() == pytest.approx(1.5)
+    b.add("b", {"gene": [{}]}, _ticket(10.5))
+    pending = b.drain_tickets()
+    assert len(pending) == 2 and b.depth() == 0
+
+
+def test_batcher_validation():
+    with pytest.raises(ValueError, match="flush_window"):
+        MicroBatcher(flush_window=-1)
+    with pytest.raises(ValueError, match="max_batch_rows"):
+        MicroBatcher(max_batch_rows=0)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+
+
+def test_admission_queue_full_and_storm():
+    clock = [0.0]
+    adm = AdmissionController(max_queue=4, storm_queue=1,
+                              stall_window_s=10.0, clock=lambda: clock[0])
+    assert adm.admit("t", 3) is None
+    shed = adm.admit("t", 4)
+    assert isinstance(shed, Overloaded) and shed.reason == "queue_full"
+    assert shed.queue_depth == 4 and shed.retry_after_s > 0
+    assert not shed                      # falsy by design
+    assert not adm.in_storm()
+    adm.note_recompile(2)
+    assert adm.in_storm() and adm.recompile_stalls == 2
+    assert adm.admit("t", 0) is None     # below the storm low-water
+    storm = adm.admit("t", 1)
+    assert storm is not None and storm.reason == "recompile_storm"
+    assert storm.retry_after_s == pytest.approx(10.0)
+    clock[0] = 11.0                      # storm window expired
+    assert not adm.in_storm() and adm.admit("t", 1) is None
+    assert adm.stats()["sheds"] == {"queue_full": 1, "recompile_storm": 1}
+
+
+def test_admission_validation():
+    with pytest.raises(ValueError, match="max_queue"):
+        AdmissionController(max_queue=0)
+    with pytest.raises(ValueError, match="storm_queue"):
+        AdmissionController(max_queue=4, storm_queue=5)
+
+
+def test_ticket_result_timeout_and_error():
+    tk = Ticket("t", enqueued_at=0.0)
+    assert not tk.done()
+    with pytest.raises(TimeoutError, match="'t'"):
+        tk.result(timeout=0.01)
+    tk.fail(RuntimeError("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        tk.result(timeout=1)
+
+
+# ---------------------------------------------------------------------------
+# registry + compile dedup
+
+
+def test_registry_rejects_duplicates_and_unknown():
+    reg = SessionRegistry(default_config=CONFIG)
+    reg.register("a", _dis())
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", _dis())
+    with pytest.raises(KeyError, match="unknown tenant"):
+        reg.get("nope")
+    assert "a" in reg and "nope" not in reg and len(reg) == 1
+
+
+def test_front_door_k_compiles_for_t_tenants_and_bit_identity():
+    clear_plan_cache()
+    door = FrontDoor(CONFIG, flush_window=0.0, max_queue=64)
+    tenants, shapes = 4, 2
+    for t in range(tenants):
+        door.register(f"t{t}", _dis(shape=t % shapes))
+    assert door.registry.compile_dedup()["shapes"] == shapes
+
+    history = [[] for _ in range(tenants)]
+    for rnd in range(2):
+        tickets = []
+        for t in range(tenants):
+            recs = _recs(2, seed=100 + rnd * tenants + t)
+            history[t].append(recs)
+            resp = door.submit(f"t{t}", recs)
+            assert isinstance(resp, Ticket)
+            tickets.append(resp)
+        door.pump(force=True)
+        for tk in tickets:
+            res = tk.result(timeout=600)
+            assert isinstance(res, IngestResult)
+            assert res.kg_triples > 0 and res.latency_s >= res.ingest_s >= 0
+
+    dedup = door.registry.compile_dedup()
+    assert dedup == {"tenants": tenants, "shapes": shapes,
+                     "compiles": shapes, "ratio": tenants / shapes}
+
+    # every tenant bit-identical to a dedicated session fed the same
+    # stream in the same flush granularity
+    for t in range(tenants):
+        engine = KGEngine(_dis(shape=t % shapes), config=CONFIG)
+        kg, _ = engine.create_kg()
+        for recs in history[t]:
+            deltas = {n: Table.from_records(r, engine.sources[n].attrs,
+                                            engine.vocab)
+                      for n, r in recs.items() if r}
+            kg, _ = engine.ingest(deltas)
+        served = door.kg(f"t{t}")
+        assert host_int(served.count) == host_int(kg.count)
+        n = host_int(kg.count)
+        np.testing.assert_array_equal(np.asarray(served.data)[:n],
+                                      np.asarray(kg.data)[:n])
+
+
+def test_front_door_coalesces_and_reports_stats():
+    clear_plan_cache()
+    door = FrontDoor(CONFIG, flush_window=0.0, max_queue=64)
+    door.register("a", _dis())
+    t1 = door.submit("a", _recs(1, seed=1))
+    t2 = door.submit("a", _recs(1, seed=2))
+    assert door.pump(force=True) == 1          # ONE flush for both
+    r1, r2 = t1.result(timeout=600), t2.result(timeout=600)
+    assert r1.batched_requests == r2.batched_requests == 2
+    assert r1.flush_id == r2.flush_id
+
+    st = door.serve_stats()
+    assert st["tenants"] == 1 and st["accepted"] == 2
+    assert st["completed"] == 2 and st["rejected"] == 0
+    assert st["flushes"] == 1 and st["queue_depth"] == 0
+    assert st["compiles"] == 1 and st["compile_dedup_ratio"] == 1.0
+    assert st["latency"]["count"] == 2
+    per = st["per_tenant"]["a"]
+    assert per["requests"] == 2 and per["ingests"] == 1
+    assert per["rows"] == 4 and per["kg_triples"] > 0
+    assert len(per["shape_id"]) == 12
+
+
+def test_front_door_backpressure_no_silent_drops():
+    clear_plan_cache()
+    door = FrontDoor(CONFIG, flush_window=0.0, max_queue=2, storm_queue=1,
+                     stall_window_s=600.0)
+    door.register("a", _dis())
+    responses = [door.submit("a", _recs(1, seed=i)) for i in range(4)]
+    tickets = [r for r in responses if isinstance(r, Ticket)]
+    sheds = [r for r in responses if isinstance(r, Overloaded)]
+    assert len(tickets) == 2 and len(sheds) == 2
+    assert all(s.reason == "queue_full" for s in sheds)
+    door.pump(force=True)
+    assert all(tk.result(timeout=600).kg_triples > 0 for tk in tickets)
+
+    # bucket-crossing delta -> recompile -> storm window opens
+    tk = door.submit("a", _recs(64, seed=9))   # 24-row seed: crosses bucket
+    door.pump(force=True)
+    assert tk.result(timeout=600).recompiles >= 1
+    st = door.serve_stats()
+    assert st["recompile_stalls"] >= 1 and st["admission"]["in_storm"]
+    ok = door.submit("a", _recs(1, seed=10))     # depth 0 < storm_queue
+    storm = door.submit("a", _recs(1, seed=11))  # depth 1 >= storm_queue
+    assert isinstance(ok, Ticket) and isinstance(storm, Overloaded)
+    assert storm.reason == "recompile_storm"
+    door.pump(force=True)
+    st = door.serve_stats()
+    assert st["accepted"] + st["rejected"] == 7   # every submit accounted
+    assert st["completed"] == st["accepted"] and st["errors"] == 0
+
+
+def test_front_door_error_path_fails_tickets_loudly():
+    clear_plan_cache()
+    door = FrontDoor(CONFIG, flush_window=0.0, max_queue=8)
+    door.register("a", _dis())
+    tk = door.submit("a", {"no_such_source": [{"x": 1}]})
+    door.pump(force=True)
+    with pytest.raises(KeyError):
+        tk.result(timeout=600)
+    st = door.serve_stats()
+    assert st["errors"] == 1 and st["per_tenant"]["a"]["errors"] == 1
+
+    # stop(drain=False) fails queued tickets instead of dropping them
+    tk2 = door.submit("a", _recs(1, seed=1))
+    door.stop(drain=False)
+    with pytest.raises(RuntimeError, match="stopped before flush"):
+        tk2.result(timeout=1)
+
+
+def test_front_door_worker_thread_mode():
+    clear_plan_cache()
+    door = FrontDoor(CONFIG, flush_window=0.005, max_queue=64).start()
+    try:
+        with pytest.raises(RuntimeError, match="already started"):
+            door.start()
+        with pytest.raises(RuntimeError, match="worker thread"):
+            door.pump()
+        door.register("a", _dis())
+        tickets = [door.submit("a", _recs(1, seed=i)) for i in range(3)]
+        results = [tk.result(timeout=600) for tk in tickets]
+        assert all(r.kg_triples > 0 for r in results)
+        door.drain(timeout=60)
+    finally:
+        door.stop()
+    assert door.serve_stats()["completed"] == 3
+    assert threading.active_count() >= 1    # worker joined cleanly
+
+
+def test_front_door_unknown_tenant_raises_at_the_door():
+    door = FrontDoor(CONFIG)
+    with pytest.raises(KeyError, match="register"):
+        door.submit("ghost", _recs(1))
+
+
+def test_api_reexports_serve_surface():
+    import repro.api as api
+    assert api.FrontDoor is FrontDoor
+    assert api.Overloaded is Overloaded
+    assert api.percentile is percentile
+    assert "FrontDoor" in dir(api)
+    with pytest.raises(AttributeError):
+        api.not_a_real_name
